@@ -1,0 +1,99 @@
+"""Paper Figures 5/6/9-11 + Table 4: acceptance curves, beta/u ablations,
+chi-square estimates — run on the exact toy environment (cheap, exact) and
+the trained synthetic engine (for chi^2 from real log-ratios).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import ToyEnv, theory
+
+
+def fig5_acceptance_vs_n(fast: bool = False):
+    env = ToyEnv(m=12, seed=0)
+    beta, u = 1.0, 0.5
+    ns = [1, 4, 16] if fast else [1, 4, 16, 64, 256]
+    for n in ns:
+        trials = min(100_000, 1_600_000 // n)
+        g = env.run_gsi(jax.random.PRNGKey(n), n=n, beta=beta, u=u,
+                        trials=trials)
+        r = env.run_rsd(jax.random.PRNGKey(n + 1), n=n, beta=beta,
+                        threshold=0.7, trials=trials)
+        common.emit(f"fig5_acceptance/n{n}", 0.0,
+                    f"gsi={float(g.accept.mean()):.3f};"
+                    f"rsd={float(r.accept.mean()):.3f}")
+
+
+def fig6_beta_phase_transition(fast: bool = False):
+    """Acceptance rate vs beta shows the sharp transition (paper Fig. 6)."""
+    env = ToyEnv(m=12, seed=0)
+    n, u = 8, 0.5
+    accepts = []
+    betas = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 20.0]
+    for b in betas:
+        g = env.run_gsi(jax.random.PRNGKey(int(b * 10)), n=n, beta=b, u=u,
+                        trials=60_000)
+        accepts.append(float(g.accept.mean()))
+        common.emit(f"fig6_beta/beta{b}", 0.0, f"accept={accepts[-1]:.3f}")
+    # the log-ratio term ~ 1/beta: small beta -> tilted rewards dominated by
+    # log ratio -> acceptance collapses; large beta -> raw rewards
+    common.emit("fig6_beta/transition", 0.0,
+                f"min={min(accepts):.3f};max={max(accepts):.3f};"
+                f"spread={max(accepts) - min(accepts):.3f}")
+
+
+def fig9_u_ablation(fast: bool = False):
+    requests = 6 if fast else 12
+    problems = common.sample_problems(requests, seed=5)
+    for u in ([0.2, 0.6] if fast else [0.0, 0.2, 0.4, 0.6, 0.8]):
+        res = common.eval_method("gsi", 2, problems, seed=6, u=u)
+        common.emit(f"fig9_u/u{u}", 0.0,
+                    f"acc={res['accuracy']:.3f};"
+                    f"accept={res['accept_rate']:.3f}")
+
+
+def table4_chi2(fast: bool = False):
+    """chi^2(pi_B || pi_S) MC estimates from engine log-ratios (Table 4)."""
+    requests = 6 if fast else 12
+    problems = common.sample_problems(requests, seed=7)
+    res = common.eval_method("gsi", 4, problems, seed=8)
+    ratios = np.concatenate([r.ravel() for r in res["stats"].logp_ratio])
+    chi2 = float(theory.chi2_mc_estimate(jnp.asarray(ratios),
+                                         jnp.zeros_like(jnp.asarray(ratios))))
+    common.emit("table4_chi2/engine", 0.0,
+                f"mean={np.mean(np.exp(np.clip(ratios, -30, 30)) - 1):.3f};"
+                f"chi2_est={chi2:.3f};n_samples={ratios.size}")
+    # exact toy-env values for reference
+    for seed in range(3):
+        env = ToyEnv(m=12, seed=seed)
+        common.emit(f"table4_chi2/toy_seed{seed}", 0.0,
+                    f"chi2={float(env.chi2):.3f}")
+
+
+def theorem1_table(fast: bool = False):
+    """Theorem 1: measured KL vs bound across n (EXPERIMENTS §Paper-claims)."""
+    env = ToyEnv(m=12, seed=0)
+    beta = 1.0
+    tilted = env.tilted(beta)
+    chi2 = float(env.chi2)
+    rmax = float(env.r.max())
+    for n in ([1, 4, 16] if fast else [1, 4, 16, 64]):
+        trials = min(120_000, 2_000_000 // n)
+        tr = env.run_gsi(jax.random.PRNGKey(n), n=n, beta=beta, u=0.5,
+                         trials=trials)
+        emp = env.histogram(tr.outcomes_tilde)
+        kl = float(theory.kl_mc_estimate(tilted, emp * trials))
+        bound = float(theory.theorem1_kl_bound(n, chi2, beta, rmax))
+        common.emit(f"theorem1/n{n}", 0.0,
+                    f"kl={kl:.5f};bound={bound:.5f};holds={kl <= bound}")
+
+
+def run(fast: bool = False):
+    fig5_acceptance_vs_n(fast)
+    fig6_beta_phase_transition(fast)
+    fig9_u_ablation(fast)
+    table4_chi2(fast)
+    theorem1_table(fast)

@@ -1,0 +1,41 @@
+"""Paper Tables 2/3 + Figure 2: accuracy of GSI vs RSD vs S-BoN across n.
+
+Synthetic-task analogue (DESIGN.md §6): same four methods + the
+no-rejection ablation, accuracy measured against the exact grader.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+METHODS = ["gsi", "gsi_norej", "rsd", "sbon_s", "sbon_b"]
+
+
+def run(fast: bool = False):
+    ns = [1, 2] if fast else [1, 2, 4]
+    requests = 8 if fast else 16
+    problems = common.sample_problems(requests)
+    results = {}
+    for n in ns:
+        for method in METHODS:
+            t0 = time.perf_counter()
+            res = common.eval_method(method, n, problems)
+            wall = (time.perf_counter() - t0) * 1e6
+            results[(method, n)] = res
+            common.emit(
+                f"table2_accuracy/{method}/n{n}", wall / requests,
+                f"acc={res['accuracy']:.3f};accept={res['accept_rate']:.2f}")
+    # paper claim (Fig. 2): GSI >= S-BoN(small) and GSI >= RSD at the
+    # largest n (statistically, on the synthetic analogue)
+    n = ns[-1]
+    gsi = results[("gsi", n)]["accuracy"]
+    sb_s = results[("sbon_s", n)]["accuracy"]
+    rsd = results[("rsd", n)]["accuracy"]
+    sb_b = results[("sbon_b", n)]["accuracy"]
+    common.emit(f"table2_ordering/n{n}", 0.0,
+                f"gsi={gsi:.3f};rsd={rsd:.3f};sbon_s={sb_s:.3f};"
+                f"sbon_b={sb_b:.3f};gsi_ge_sbons={gsi >= sb_s}")
+    return results

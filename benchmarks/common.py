@@ -1,0 +1,85 @@
+"""Shared benchmark infrastructure: trained triple cache, engine cache,
+CSV emission (``name,us_per_call,derived``)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.config import GSIConfig
+from repro.data import SyntheticReasoningTask
+from repro.launch.serve import evaluate, toy_triple, train_triple
+from repro.serving import GSIServingEngine
+
+FAST = False          # set by run.py --fast
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def all_rows():
+    return list(_ROWS)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / repeats * 1e6
+
+
+@functools.lru_cache(maxsize=1)
+def get_task():
+    return SyntheticReasoningTask(seed=0, min_terms=2, max_terms=3,
+                                  max_value=9)
+
+
+@functools.lru_cache(maxsize=1)
+def get_triple():
+    """Train the draft/target/PRM triple once, shared by all benchmarks."""
+    task = get_task()
+    d, t, p = toy_triple()
+    steps = (100, 220) if FAST else (150, 320)
+    print(f"# training triple (draft {steps[0]} / target {steps[1]} steps)",
+          flush=True)
+    ps, pb, pp = train_triple(task, d, t, p, steps_draft=steps[0],
+                              steps_target=steps[1], batch=24, seq=48)
+    return (d, t, p), (ps, pb, pp)
+
+
+_ENGINES = {}
+
+
+def get_engine(mode: str, n: int, *, beta=8.0, u=0.4, max_steps=5,
+               rsd_threshold=0.7) -> GSIServingEngine:
+    key = (mode, n, beta, u, rsd_threshold)
+    if key not in _ENGINES:
+        cfgs, params = get_triple()
+        g = GSIConfig(n=n, beta=beta, threshold_u=u, max_step_tokens=8,
+                      max_steps=max_steps, min_step_reward=0.0)
+        _ENGINES[key] = GSIServingEngine(
+            *cfgs, *params, g, mode=mode, rsd_threshold=rsd_threshold,
+            max_seq=112)
+    return _ENGINES[key]
+
+
+def eval_method(mode: str, n: int, problems, seed=0, **kw):
+    task = get_task()
+    eng = get_engine(mode, n, **kw)
+    return evaluate(eng, task, problems, jax.random.PRNGKey(seed))
+
+
+def sample_problems(count: int, seed=1):
+    task = get_task()
+    rng_state = np.random.default_rng(seed)
+    # re-seed the task generator deterministically for reproducible sets
+    task.rng = np.random.default_rng(seed)
+    return [task.sample_problem() for _ in range(count)]

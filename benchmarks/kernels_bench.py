@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: ref-path timing (CPU) + VMEM tiling derived
+numbers for the TPU target (the kernels themselves are TPU programs; on CPU
+we report the oracle path and the kernel's analytic HBM-traffic saving).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ref
+
+
+def run(fast: bool = False):
+    # logprob_gather: the GSI scoring op. Derived: HBM bytes naive vs fused.
+    B, S, d, V = (4, 32, 256, 8192) if fast else (8, 64, 512, 32768)
+    h = jax.random.normal(jax.random.PRNGKey(0), (B, S, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, V)) * 0.02
+    lab = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, V)
+    fn = jax.jit(lambda a, b, c: ref.logprob_gather_ref(a, b, c, V))
+    _, us = common.timed(fn, h, w, lab)
+    naive = B * S * V * 4 * 2          # logits write+read (f32)
+    fused = B * S * 4 * 3              # m/s/picked accumulators only
+    common.emit("kernel/logprob_gather_ref", us,
+                f"hbm_naive={naive / 1e6:.1f}MB;hbm_fused={fused / 1e3:.1f}KB;"
+                f"saving={naive / max(fused, 1):.0f}x")
+
+    # flash attention
+    B, S, H, KV, hd = (1, 128, 4, 2, 64) if fast else (2, 256, 8, 2, 64)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, KV, hd))
+    fn = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    _, us = common.timed(fn, q, k, v)
+    scores = B * H * S * S * 4
+    common.emit("kernel/flash_attention_ref", us,
+                f"scores_hbm={scores / 1e6:.1f}MB;"
+                f"vmem_tile=128x128;flops={4 * B * H * S * S * hd / 1e9:.2f}G")
+
+    # rwkv6 scan
+    B, T, H, hd = (1, 64, 4, 32) if fast else (2, 128, 8, 64)
+    ks = jax.random.split(jax.random.PRNGKey(6), 6)
+    r, kk, vv = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    s0 = jnp.zeros((B, H, hd, hd))
+    fn = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a))
+    _, us = common.timed(fn, r, kk, vv, w, u, s0)
+    state_traffic_naive = B * H * hd * hd * 4 * 2 * T
+    common.emit("kernel/rwkv6_scan_ref", us,
+                f"state_hbm_per_chunkless={state_traffic_naive / 1e6:.1f}MB;"
+                f"kernel_keeps_state_in_vmem=true;chunk=64")

@@ -1,0 +1,71 @@
+"""Paper Table 1 + Figure 4: seconds/step, steps/s, runtime breakdown.
+
+Wall-clock on this CPU container is not meaningful for TPU latency, so the
+table combines (a) engine-measured acceptance rates and step statistics
+with (b) the roofline latency model (serving/latency.py) at the paper's
+model scales (Qwen2.5-Math 1.5B/7B + 7B PRM on our v5e constants).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.config import get_config
+from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
+
+
+def paper_latency_model():
+    draft = get_config("qwen2.5-math-1.5b")
+    target = get_config("qwen2.5-math-7b")
+    prm = get_config("qwen2.5-math-prm-7b")
+
+    def cost(cfg):
+        kv = cfg.num_layers * cfg.kv_dim * 2 * 2  # bytes per token (bf16)
+        return ModelCost(cfg.active_param_count(), kv)
+
+    return LatencyModel(cost(draft), cost(target), cost(prm), HW_V5E)
+
+
+def run(fast: bool = False):
+    lm = paper_latency_model()
+    ns = [4, 16]
+    requests = 6 if fast else 16
+    problems = common.sample_problems(requests, seed=3)
+    # paper-scale step length / count (Table 1: ~10 steps, 512-token cap;
+    # we use the measured synthetic acceptance rate per method)
+    step_len, steps, ctx = 220.0, 10.5, 1200.0
+    for n in ns:
+        rates = {}
+        for method in ["gsi", "rsd"]:
+            res = common.eval_method(method, min(n, 4), problems, seed=4)
+            rates[method] = res["accept_rate"]
+        for method in ["gsi", "rsd", "sbon_s", "sbon_b"]:
+            acc = rates.get(method, 1.0)
+            t_step = lm.step_time(method=method, n=n, step_len=step_len,
+                                  ctx_len=ctx, accept_rate=acc)
+            common.emit(
+                f"table1_latency/{method}/n{n}", t_step * 1e6,
+                f"s_per_step={t_step:.3f};steps_per_s={1 / t_step:.2f};"
+                f"accept={acc:.2f}")
+        # headline: GSI faster than S-BoN(base)?
+        t_gsi = lm.step_time(method="gsi", n=n, step_len=step_len,
+                             ctx_len=ctx, accept_rate=rates["gsi"])
+        t_b = lm.step_time(method="sbon_b", n=n, step_len=step_len,
+                           ctx_len=ctx)
+        common.emit(f"table1_speedup/n{n}", 0.0,
+                    f"gsi_vs_sbon_b={t_b / t_gsi:.2f}x")
+
+    # Figure 4: runtime breakdown across the three models for GSI
+    n = 16
+    acc = rates["gsi"]
+    hw = lm.hw
+    draft_t = step_len * lm.draft.decode_time(hw, ctx, n)
+    score_t = lm.target.forward_time(hw, n * step_len)
+    prm_t = lm.prm.forward_time(hw, n * step_len)
+    resample_t = (1 - acc) * (step_len * lm.target.decode_time(hw, ctx, n)
+                              + prm_t)
+    total = draft_t + score_t + prm_t + resample_t
+    common.emit(
+        "fig4_breakdown/gsi_n16", total * 1e6,
+        f"draft={draft_t / total:.2f};score={score_t / total:.2f};"
+        f"prm={prm_t / total:.2f};resample={resample_t / total:.2f}")

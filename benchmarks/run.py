@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only accuracy,...]
+
+Tables covered (paper -> module):
+    Table 2/3, Fig. 2   accuracy.py      method accuracy across n
+    Table 1, Fig. 4     latency.py       s/step, steps/s, runtime breakdown
+    Fig. 5              ablations.py     acceptance vs n (GSI vs RSD)
+    Fig. 6-8            ablations.py     beta phase transition
+    Fig. 9-11           ablations.py     threshold-u ablation
+    Table 4             ablations.py     chi^2 estimates
+    Theorem 1 (C.5)     ablations.py     KL vs bound table
+    kernels             kernels_bench.py VMEM-tiling micro numbers
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: accuracy,latency,ablations,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import common
+    common.FAST = args.fast
+    only = set(args.only.split(",")) if args.only else None
+
+    t0 = time.time()
+    print("name,us_per_call,derived", flush=True)
+
+    def want(name):
+        return only is None or name in only
+
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        kernels_bench.run(args.fast)
+    if want("ablations"):
+        from benchmarks import ablations
+        ablations.run(args.fast)
+    if want("accuracy"):
+        from benchmarks import accuracy
+        accuracy.run(args.fast)
+    if want("latency"):
+        from benchmarks import latency
+        latency.run(args.fast)
+
+    print(f"# total {time.time() - t0:.1f}s, {len(__import__('benchmarks.common', fromlist=['all_rows']).all_rows())} rows",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

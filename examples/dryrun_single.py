@@ -1,0 +1,26 @@
+"""Example: lower + roofline one (architecture x shape) on the production
+mesh without hardware.  Thin wrapper over repro.launch.dryrun.
+
+    PYTHONPATH=src python examples/dryrun_single.py --arch gemma3-1b \
+        --shape decode_32k --mesh single
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+
+    # dryrun sets XLA_FLAGS before importing jax — import it first
+    from repro.launch.dryrun import run_one
+    rec = run_one(args.arch, args.shape, args.mesh)
+    print(json.dumps({k: v for k, v in rec.items() if k != "traceback"},
+                     indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Msgpack-based pytree checkpointing (atomic write + dtype/shape fidelity)."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {
+        "leaves": [
+            {"dtype": str(np.asarray(l).dtype),
+             "shape": list(np.asarray(l).shape),
+             "data": np.ascontiguousarray(
+                 np.asarray(l).view(np.uint8)
+                 if np.asarray(l).dtype == jnp.bfloat16 else np.asarray(l)
+             ).tobytes()}
+            for l in leaves
+        ],
+        "treedef": str(treedef),
+    }
+    return payload, treedef
+
+
+def save_checkpoint(path: str, tree) -> None:
+    payload, _ = _encode(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+        os.replace(tmp, path)
+    except BaseException:
+        os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (shape/dtype checked)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like_tree)
+    if len(leaves) != len(payload["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(payload['leaves'])} leaves, "
+            f"expected {len(leaves)}")
+    out = []
+    for ref, rec in zip(leaves, payload["leaves"]):
+        dtype = rec["dtype"]
+        shape = tuple(rec["shape"])
+        if dtype == "bfloat16":
+            arr = np.frombuffer(rec["data"], np.uint8).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(rec["data"], np.dtype(dtype))
+        arr = arr.reshape(shape)
+        if shape != tuple(np.asarray(ref).shape):
+            raise ValueError(f"shape mismatch {shape} vs "
+                             f"{np.asarray(ref).shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)

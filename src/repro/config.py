@@ -1,0 +1,319 @@
+"""Central configuration system for the repro framework.
+
+Every model architecture is described by a :class:`ModelConfig`; input shapes
+by :class:`ShapeConfig`; meshes by :class:`MeshConfig`; the GSI algorithm by
+:class:`GSIConfig`.  Architecture configs register themselves into
+``CONFIG_REGISTRY`` (see ``repro.configs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Layer kinds usable in ``layer_pattern``.
+LAYER_FULL = "full"          # full causal self-attention
+LAYER_LOCAL = "local"        # sliding-window causal self-attention
+LAYER_RECURRENT = "recurrent"  # RG-LRU recurrent block (hybrid family)
+LAYER_CROSS = "cross"        # self-attention + cross-attention (vlm / enc-dec)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0             # routed experts (0 = dense FFN)
+    experts_per_token: int = 0       # top-k
+    num_shared_experts: int = 0      # always-on experts (qwen2-moe style)
+    moe_d_ff: int = 0                # per-expert hidden dim (d_ff used if 0)
+    capacity_factor: float = 1.25    # GShard dispatch capacity factor
+    router_aux_weight: float = 0.01  # load-balance loss weight
+
+    # --- layer pattern --------------------------------------------------------
+    # The model is ``layer_pattern`` repeated; num_layers need not be a
+    # multiple of len(layer_pattern): the remainder is the pattern prefix.
+    layer_pattern: tuple = (LAYER_FULL,)
+    window_size: int = 4096          # for LAYER_LOCAL
+
+    # --- cross-modal ----------------------------------------------------------
+    encoder_layers: int = 0          # audio encoder depth (enc-dec family)
+    encoder_seq: int = 0             # #frames / #patches provided by the stub
+    cross_source_seq: int = 0        # vlm: #patch embeddings
+
+    # --- rwkv -----------------------------------------------------------------
+    rwkv_head_dim: int = 64
+
+    # --- hybrid (RG-LRU) -------------------------------------------------------
+    lru_width: int = 0               # 0 -> d_model
+
+    # --- misc -----------------------------------------------------------------
+    rope_theta: float = 1.0e6
+    norm_eps: float = 1.0e-6
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"          # activation dtype
+    param_dtype: str = "bfloat16"
+    logit_dtype: str = "float32"
+    remat: str = "none"              # none | full | offloadable
+    scan_layers: bool = True         # lax.scan over pattern blocks
+    # serving variant: clamp attention to a sliding window (long-context decode
+    # for dense archs; see DESIGN.md §4).
+    serve_window_override: int = 0   # 0 = use layer kinds as-is
+
+    # PRM head (reward models)
+    reward_head: bool = False
+
+    # source citation (model card / paper)
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_experts and self.moe_d_ff == 0:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def pattern_repeats(self) -> int:
+        return self.num_layers // len(self.layer_pattern)
+
+    @property
+    def pattern_remainder(self) -> tuple:
+        rem = self.num_layers % len(self.layer_pattern)
+        return tuple(self.layer_pattern[:rem])
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for kind in _expanded_pattern(self):
+            attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if kind == LAYER_RECURRENT:
+                w = self.lru_width
+                blk = 2 * d * w + w * d + 2 * w * 4  # gates + in/out proj + conv-ish
+            elif kind == LAYER_CROSS:
+                blk = 2 * attn  # self + cross
+            elif self.family == "ssm":
+                hd = self.rwkv_head_dim
+                blk = 4 * d * d + 6 * d  # r,k,v,o projections + decay/mix params
+            else:
+                blk = attn
+            if self.num_experts:
+                ffp = (self.num_experts + self.num_shared_experts) * 3 * d * self.moe_d_ff
+                ffp += d * self.num_experts  # router
+            else:
+                ffp = 3 * d * ff
+            if self.family == "ssm":
+                ffp = 2 * d * int(3.5 * d)  # channel-mix
+            total += blk + ffp
+        # encoder stack (enc-dec)
+        if self.encoder_layers:
+            enc = self.encoder_layers * (4 * d * d + 3 * d * ff)
+            total += enc
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed-in experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        dense_like = dataclasses.replace(
+            self, num_experts=0, num_shared_experts=0,
+            d_ff=(self.experts_per_token + self.num_shared_experts) * self.moe_d_ff)
+        return dense_like.param_count()
+
+
+def _expanded_pattern(cfg: ModelConfig):
+    pat = list(cfg.layer_pattern)
+    reps = cfg.pattern_repeats
+    return pat * reps + list(cfg.pattern_remainder)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mesh configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: tuple
+    axes: tuple
+
+    @property
+    def num_devices(self) -> int:
+        return int(math.prod(self.shape))
+
+    @property
+    def batch_axes(self) -> tuple:
+        return tuple(a for a in self.axes if a in ("pod", "data"))
+
+    @property
+    def model_axis_size(self) -> int:
+        return self.shape[self.axes.index("model")]
+
+    @property
+    def data_axis_size(self) -> int:
+        return int(math.prod(s for s, a in zip(self.shape, self.axes)
+                             if a in ("pod", "data")))
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# GSI / algorithm configuration (paper §5 hyperparameters)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GSIConfig:
+    n: int = 4                  # samples per reasoning step (draft side)
+    n_target: int = 0           # resampling-side n (0 = same as n).  The
+                                # paper flags decoupling these as future
+                                # work (§4); see EXPERIMENTS §Beyond-paper.
+    beta: float = 20.0          # inverse temperature (paper default)
+    threshold_u: float = 0.5    # acceptance threshold on tilted reward
+    temperature: float = 0.7    # sampling temperature
+    top_p: float = 1.0
+    max_step_tokens: int = 64   # max tokens per reasoning step (paper: 512)
+    max_steps: int = 16         # max reasoning steps (paper: 45 / 100)
+    sep_token_id: int = 1       # "\n\n" stand-in
+    eos_token_id: int = 2
+    min_step_reward: float = 0.1  # early-stop if all draft rewards below (B.2)
+    use_rejection: bool = True  # False = "GSI w/o rejection" ablation
+
+
+@dataclass(frozen=True)
+class RSDConfig:
+    n: int = 4
+    beta: float = 20.0
+    threshold: float = 0.7      # raw-reward acceptance threshold (Liao et al.)
+    temperature: float = 0.7
+    max_step_tokens: int = 64
+    max_steps: int = 16
+    sep_token_id: int = 1
+    eos_token_id: int = 2
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    opt_state_dtype: str = "float32"  # bf16 for the 1T config (DESIGN §5)
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+CONFIG_REGISTRY: dict = {}
+
+
+def register_config(cfg: ModelConfig) -> ModelConfig:
+    CONFIG_REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates registry)
+    if name not in CONFIG_REGISTRY:
+        raise KeyError(f"unknown architecture {name!r}; known: "
+                       f"{sorted(CONFIG_REGISTRY)}")
+    return CONFIG_REGISTRY[name]
+
+
+def list_configs() -> list:
+    import repro.configs  # noqa: F401
+    return sorted(CONFIG_REGISTRY)
+
+
+def reduced_config(cfg: ModelConfig, *, layers: int = 2, d_model: int = 128,
+                   vocab: int = 512, max_experts: int = 4) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests."""
+    num_heads = max(2, min(4, cfg.num_heads))
+    kv = max(1, min(cfg.num_kv_heads, num_heads))
+    # keep the head structure divisible
+    while num_heads % kv:
+        kv -= 1
+    pat = cfg.layer_pattern[:max(1, min(len(cfg.layer_pattern), layers))]
+    changes = dict(
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=kv,
+        head_dim=d_model // num_heads,
+        d_ff=int(d_model * 8 // 3) // 16 * 16 or 64,
+        vocab_size=vocab,
+        layer_pattern=pat,
+        window_size=min(cfg.window_size, 64),
+        rwkv_head_dim=min(cfg.rwkv_head_dim, d_model // num_heads),
+        lru_width=d_model,
+        dtype="float32",
+        param_dtype="float32",
+        scan_layers=cfg.scan_layers,
+    )
+    if cfg.num_experts:
+        e = min(cfg.num_experts, max_experts)
+        changes.update(
+            num_experts=e,
+            experts_per_token=min(cfg.experts_per_token, 2),
+            num_shared_experts=min(cfg.num_shared_experts, 1),
+            moe_d_ff=d_model // 2,
+            # lossless capacity so decode == forward exactly in smoke tests
+            capacity_factor=float(e),
+        )
+    if cfg.encoder_layers:
+        changes.update(encoder_layers=2, encoder_seq=max(16, min(cfg.encoder_seq, 32)))
+    if cfg.cross_source_seq:
+        changes.update(cross_source_seq=32)
+    return dataclasses.replace(cfg, **changes)

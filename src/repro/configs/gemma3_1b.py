@@ -1,0 +1,25 @@
+"""Gemma-3 1B — dense decoder with 5:1 local:global attention, 128k context.
+
+[hf:google/gemma-3-1b-pt]  26L, d_model=1152, 4H (GQA kv=1), d_ff=6912,
+vocab=262144.  Pattern: 5 sliding-window (512) layers per global layer;
+26 = 4*6 + 2 remainder local layers.  The huge vocab stresses the GSI
+logprob-gather scoring kernel.  long_500k: local layers are native; the 4
+global layers decode over the full cache (linear per token).
+"""
+from repro.config import ModelConfig, register_config
+
+CONFIG = register_config(ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    d_ff=6912,
+    vocab_size=262144,
+    head_dim=256,
+    layer_pattern=("local", "local", "local", "local", "local", "full"),
+    window_size=512,
+    rope_theta=1.0e6,
+    source="hf:google/gemma-3-1b-pt",
+))

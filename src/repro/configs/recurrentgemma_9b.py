@@ -1,0 +1,23 @@
+"""RecurrentGemma-9B (Griffin) — RG-LRU recurrent blocks + local attention 1:2.
+
+[arXiv:2402.19427]  38L, d_model=4096, 16H (GQA kv=1 = MQA), d_ff=12288,
+vocab=256000.  Pattern: (recurrent, recurrent, local-attn) repeated;
+38 = 12*3 + 2 remainder recurrent layers.  Sub-quadratic -> long_500k native.
+"""
+from repro.config import ModelConfig, register_config
+
+CONFIG = register_config(ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    layer_pattern=("recurrent", "recurrent", "local"),
+    window_size=2048,
+    lru_width=4096,
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma)",
+))

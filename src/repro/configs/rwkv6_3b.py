@@ -1,0 +1,22 @@
+"""RWKV6 "Finch" 3B — attention-free SSM with data-dependent decay.
+
+[arXiv:2404.05892]  32L, d_model=2560, d_ff=8960, vocab=65536.
+Attention-free: decode state is O(1) per layer; long_500k runs natively.
+"""
+from repro.config import ModelConfig, register_config
+
+CONFIG = register_config(ModelConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,            # 2560 / rwkv_head_dim(64)
+    num_kv_heads=40,
+    d_ff=8960,
+    vocab_size=65536,
+    head_dim=64,
+    rwkv_head_dim=64,
+    layer_pattern=("full",),  # unused by ssm family (single block kind)
+    tie_embeddings=False,
+    source="arXiv:2404.05892 (RWKV-6 Finch)",
+))

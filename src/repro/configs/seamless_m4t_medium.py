@@ -1,0 +1,27 @@
+"""SeamlessM4T-medium — encoder-decoder multimodal (audio) backbone.
+
+[arXiv:2308.11596]  12L decoder + 12L encoder, d_model=1024, 16H (kv=16),
+d_ff=4096, vocab=256206.  The mel-spectrogram + conformer feature frontend is
+STUBBED: input_specs() provides precomputed frame embeddings of shape
+(batch, encoder_seq, d_model); we implement the transformer encoder over the
+frames and the text decoder with per-layer cross-attention (the layer that
+GSI actually drives).
+"""
+from repro.config import ModelConfig, register_config
+
+CONFIG = register_config(ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    head_dim=64,
+    layer_pattern=("cross",),   # every decoder layer has cross-attention
+    encoder_layers=12,
+    encoder_seq=1024,           # precomputed audio frame embeddings
+    tie_embeddings=False,
+    source="arXiv:2308.11596 (SeamlessM4T)",
+))

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: Guided Speculative Inference.
+
+Array-level decision math lives here (model-free, reused by the toy
+environment, the tests and the serving engine); the three-model serving
+orchestration is ``repro.serving.gsi_engine``.
+"""
+from repro.core.sbon import soft_bon_select, hard_bon_select  # noqa: F401
+from repro.core.tilting import (  # noqa: F401
+    tilted_rewards, tilted_policy, log_partition)
+from repro.core.gsi import gsi_select, GSIDecision  # noqa: F401
+from repro.core.rsd import rsd_select  # noqa: F401
+from repro.core import theory  # noqa: F401
+from repro.core.toy import ToyEnv  # noqa: F401

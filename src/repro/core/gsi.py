@@ -1,0 +1,32 @@
+"""GSI per-step decision (Algorithm 1, lines 4-6).
+
+Given n draft candidates with PRM rewards and both models' log-likelihoods:
+compute tilted rewards, soft-BoN-sample the index, and accept iff the
+selected tilted reward clears the threshold u.  The resampling fallback
+(lines 8-12) is model-level and lives in ``repro.serving.gsi_engine``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sbon import soft_bon_select
+from repro.core.tilting import tilted_rewards
+
+
+class GSIDecision(NamedTuple):
+    index: jnp.ndarray        # (B,) selected candidate i*
+    tilted: jnp.ndarray       # (B, n) tilted rewards r~
+    selected_tilted: jnp.ndarray  # (B,) r~_{i*}
+    accept: jnp.ndarray       # (B,) r~_{i*} >= u
+
+
+def gsi_select(rng, rewards, logp_B, logp_S, *, beta: float,
+               threshold_u: float) -> GSIDecision:
+    """rewards/logp_B/logp_S: (B, n) per draft candidate."""
+    r_t = tilted_rewards(rewards, logp_B, logp_S, beta)
+    idx = soft_bon_select(rng, r_t, beta)
+    sel = jnp.take_along_axis(r_t, idx[:, None], axis=-1)[:, 0]
+    return GSIDecision(idx, r_t, sel, sel >= threshold_u)

@@ -1,0 +1,29 @@
+"""Reward-guided speculative decoding baseline (Liao et al., 2025).
+
+Same step-level speculation skeleton as GSI but with *raw* PRM rewards (no
+likelihood-ratio tilting) and the raw-reward acceptance threshold (0.7 in
+their paper).  This is the paper's main baseline; its guarantee is only on
+the expected reward, not the policy.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sbon import soft_bon_select
+
+
+class RSDDecision(NamedTuple):
+    index: jnp.ndarray
+    selected_reward: jnp.ndarray
+    accept: jnp.ndarray
+
+
+def rsd_select(rng, rewards, *, beta: float, threshold: float) -> RSDDecision:
+    """rewards: (B, n) raw PRM rewards of the draft candidates."""
+    idx = soft_bon_select(rng, rewards, beta)
+    sel = jnp.take_along_axis(rewards.astype(jnp.float32), idx[:, None],
+                              axis=-1)[:, 0]
+    return RSDDecision(idx, sel, sel >= threshold)

@@ -1,0 +1,24 @@
+"""(Soft) best-of-n selection (Verdun et al., 2025; Beirami et al., 2025)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_bon_select(rng, rewards, beta: float):
+    """Sample index i ~ softmax(beta * rewards) per row.
+
+    rewards: (..., n) -> indices (...,).  beta -> inf recovers hard BoN,
+    beta -> 0 uniform choice.
+    """
+    logits = beta * rewards.astype(jnp.float32)
+    return jax.random.categorical(rng, logits, axis=-1)
+
+
+def hard_bon_select(rewards):
+    """argmax_i r_i (greedy best-of-n)."""
+    return jnp.argmax(rewards, axis=-1)
+
+
+def soft_bon_weights(rewards, beta: float):
+    return jax.nn.softmax(beta * rewards.astype(jnp.float32), axis=-1)

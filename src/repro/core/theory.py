@@ -1,0 +1,94 @@
+"""Theorems 1 & 2: bounds, divergences and their Monte-Carlo estimators.
+
+Everything the paper states quantitatively, as code:
+  * Theorem 1 n-bound and the KL bound it inverts (Appendix A.1),
+  * Theorem 2 golden-reward gap bound (Appendix A.2),
+  * S-BoN KL bound, eq. (2) (Verdun et al., 2025),
+  * chi^2 Monte-Carlo estimator used for Table 4 (Appendix C.5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Exact divergences for categorical distributions (toy environment)
+# ---------------------------------------------------------------------------
+
+def kl_divergence(p, q, eps: float = 1e-12):
+    p = jnp.clip(p, 0.0)
+    ratio = jnp.log(jnp.clip(p, eps)) - jnp.log(jnp.clip(q, eps))
+    return jnp.sum(jnp.where(p > 0, p * ratio, 0.0), axis=-1)
+
+
+def chi2_divergence(p, q, eps: float = 1e-12):
+    """chi^2(P || Q) = sum_y P(y)^2 / Q(y) - 1."""
+    return jnp.sum(jnp.where(p > 0, p * p / jnp.clip(q, eps), 0.0),
+                   axis=-1) - 1.0
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1
+# ---------------------------------------------------------------------------
+
+def theorem1_n_bound(chi2, beta: float, r_max: float, eps: float):
+    """Smallest n guaranteeing KL(pi_{beta,B} || pi~_GSI) <= eps."""
+    num = (chi2 + 1.0) * jnp.exp(2.0 * beta * r_max) - 1.0
+    return num / (jnp.exp(eps) - 1.0)
+
+
+def theorem1_kl_bound(n, chi2, beta: float, r_max: float):
+    """KL bound as a function of n (the last display of the A.1 proof)."""
+    n = jnp.asarray(n, jnp.float32)
+    return jnp.log((chi2 + 1.0) * jnp.exp(2.0 * beta * r_max) / n
+                   + (n - 1.0) / n)
+
+
+def sbon_kl_bound(n, pi_B, r, beta: float):
+    """Eq. (2): KL(pi_{beta,B} || pi^n_{beta,B}) <= log(1 + Var/(n E^2))."""
+    w = jnp.exp(beta * r)
+    e = jnp.sum(pi_B * w, axis=-1)
+    var = jnp.sum(pi_B * (w - e[..., None]) ** 2, axis=-1)
+    return jnp.log1p(var / (n * e ** 2))
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2
+# ---------------------------------------------------------------------------
+
+def coefficient_of_variation(pi_B, r, beta: float):
+    """CV(e^{beta r}) under pi_B."""
+    w = jnp.exp(beta * r)
+    e = jnp.sum(pi_B * w, axis=-1)
+    var = jnp.sum(pi_B * (w - e[..., None]) ** 2, axis=-1)
+    return jnp.sqrt(var) / e
+
+
+def theorem2_gap_bound(n, p_accept, chi2, cv, beta: float, r_max: float,
+                       r_star_max: float):
+    """E_{pi_{beta,B}}[r*] - E_{pi_GSI}[r*] <= this (Theorem 2, formal)."""
+    n = jnp.asarray(n, jnp.float32)
+    term_a = jnp.sqrt(p_accept) * jnp.exp(beta * r_max) * jnp.sqrt(chi2 + 1.0)
+    term_b = (1.0 - p_accept) ** 0.25 * jnp.sqrt(cv ** 2 + 1.0)
+    return r_star_max / jnp.sqrt(n) * (term_a + term_b)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo estimators (Appendix C.5, Table 4)
+# ---------------------------------------------------------------------------
+
+def chi2_mc_estimate(logp_B, logp_S):
+    """(1/N) sum_i (exp(logp_B_i - logp_S_i) - 1)^2 with y_i ~ pi_S.
+
+    The paper's per-step estimator: logp arrays of shape (N,).
+    """
+    ratio = jnp.exp(jnp.clip(logp_B - logp_S, -30.0, 30.0))
+    return jnp.mean((ratio - 1.0) ** 2)
+
+
+def kl_mc_estimate(p_exact, empirical_counts, eps: float = 1e-9):
+    """KL(P || Q_hat) with Q_hat from MC counts (add-eps smoothing)."""
+    q = (empirical_counts + eps)
+    q = q / jnp.sum(q, axis=-1, keepdims=True)
+    return kl_divergence(p_exact, q)

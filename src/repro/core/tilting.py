@@ -1,0 +1,37 @@
+"""Reward tilting — the central identity of GSI (paper §4).
+
+The optimal KL-regularized policy  pi_{beta,B}(y|x) ∝ pi_B(y|x) e^{beta r}
+can be rewritten over the *draft* model:
+
+    pi_{beta,B}(y|x) ∝ pi_S(y|x) exp(beta * r~(x,y)),
+    r~(x,y) = r(x,y) + (1/beta) * log(pi_B(y|x) / pi_S(y|x)).
+
+So soft best-of-n over draft samples with the *tilted* rewards r~
+approximates pi_{beta,B} (Theorem 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tilted_rewards(r, logp_B, logp_S, beta: float):
+    """r~ = r + (log pi_B - log pi_S) / beta  (elementwise)."""
+    return (r.astype(jnp.float32)
+            + (logp_B.astype(jnp.float32) - logp_S.astype(jnp.float32))
+            / beta)
+
+
+def tilted_policy(pi_B, r, beta: float):
+    """Exact tilted categorical pi_{beta,B} ∝ pi_B * exp(beta r).
+
+    pi_B: (..., m) probabilities; r: (..., m) rewards.
+    """
+    logp = jnp.log(jnp.clip(pi_B, 1e-38)) + beta * r
+    return jax.nn.softmax(logp, axis=-1)
+
+
+def log_partition(pi_B, r, beta: float):
+    """log Z_{beta,B} = log E_{pi_B}[e^{beta r}]."""
+    logp = jnp.log(jnp.clip(pi_B, 1e-38)) + beta * r
+    return jax.scipy.special.logsumexp(logp, axis=-1)

@@ -1,0 +1,116 @@
+"""Categorical toy environment — *exact* validation of Theorems 1 & 2.
+
+Y is a finite outcome set; pi_S, pi_B are explicit categoricals and r an
+explicit reward vector, so the optimal tilted policy pi_{beta,B}, chi^2, CV
+and every bound are in closed form while GSI itself is simulated exactly as
+Algorithm 1 (vectorized over many trials).  This is how we check the KL and
+golden-reward guarantees numerically (EXPERIMENTS.md §Paper-claims).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import theory
+from repro.core.tilting import tilted_policy
+
+
+class GSITrials(NamedTuple):
+    outcomes: jnp.ndarray        # (T,) final outcome per trial (with rejection)
+    outcomes_tilde: jnp.ndarray  # (T,) outcome of pi~_GSI (no rejection)
+    accept: jnp.ndarray          # (T,) acceptance indicator
+
+
+class ToyEnv:
+    def __init__(self, m: int = 12, *, seed: int = 0, skew: float = 1.5,
+                 reward_seed=None):
+        rng = np.random.default_rng(seed)
+        # draft is a smoothed/perturbed version of the base => finite chi^2
+        logits_b = rng.normal(0, skew, m)
+        logits_s = logits_b + rng.normal(0, skew / 2, m)
+        self.pi_B = jnp.asarray(_softmax(logits_b), jnp.float32)
+        self.pi_S = jnp.asarray(_softmax(0.7 * logits_s), jnp.float32)
+        rr = np.random.default_rng(
+            seed if reward_seed is None else reward_seed)
+        self.r = jnp.asarray(rr.uniform(0, 1, m), jnp.float32)
+        # golden reward: noisy monotone transform of r (r "approximates" r*)
+        self.r_star = jnp.clip(
+            self.r + rr.normal(0, 0.1, m).astype(np.float32), 0, 1)
+        self.m = m
+
+    # -- closed forms -------------------------------------------------------
+    def tilted(self, beta: float):
+        return tilted_policy(self.pi_B, self.r, beta)
+
+    @property
+    def chi2(self):
+        return theory.chi2_divergence(self.pi_B, self.pi_S)
+
+    def cv(self, beta: float):
+        return theory.coefficient_of_variation(self.pi_B, self.r, beta)
+
+    def expected_golden(self, policy):
+        return jnp.sum(policy * self.r_star)
+
+    # -- Algorithm 1, vectorized over trials --------------------------------
+    def run_gsi(self, rng, *, n: int, beta: float, u: float,
+                trials: int = 200_000, n_target: int = 0) -> GSITrials:
+        """Algorithm 1; n_target > 0 decouples the resampling-side n
+        (the paper's flagged future-work knob)."""
+        k_draft, k_sel, k_base, k_bsel = jax.random.split(rng, 4)
+        # draft candidates
+        ys = jax.random.categorical(
+            k_draft, jnp.log(self.pi_S)[None, :], shape=(trials, n))
+        log_ratio = jnp.log(self.pi_B) - jnp.log(self.pi_S)
+        r_t = self.r[ys] + log_ratio[ys] / beta              # (T,n)
+        idx = jax.random.categorical(k_sel, beta * r_t, axis=-1)
+        sel = jnp.take_along_axis(ys, idx[:, None], 1)[:, 0]
+        sel_rt = jnp.take_along_axis(r_t, idx[:, None], 1)[:, 0]
+        accept = sel_rt >= u
+        # rejection branch: S-BoN with pi_B and raw rewards
+        nb = n_target or n
+        yb = jax.random.categorical(
+            k_base, jnp.log(self.pi_B)[None, :], shape=(trials, nb))
+        jdx = jax.random.categorical(k_bsel, beta * self.r[yb], axis=-1)
+        selb = jnp.take_along_axis(yb, jdx[:, None], 1)[:, 0]
+        final = jnp.where(accept, sel, selb)
+        return GSITrials(final, sel, accept)
+
+    def run_rsd(self, rng, *, n: int, beta: float, threshold: float,
+                trials: int = 200_000):
+        k_draft, k_sel, k_base, k_bsel = jax.random.split(rng, 4)
+        ys = jax.random.categorical(
+            k_draft, jnp.log(self.pi_S)[None, :], shape=(trials, n))
+        r = self.r[ys]
+        idx = jax.random.categorical(k_sel, beta * r, axis=-1)
+        sel = jnp.take_along_axis(ys, idx[:, None], 1)[:, 0]
+        sel_r = jnp.take_along_axis(r, idx[:, None], 1)[:, 0]
+        accept = sel_r >= threshold
+        yb = jax.random.categorical(
+            k_base, jnp.log(self.pi_B)[None, :], shape=(trials, n))
+        jdx = jax.random.categorical(k_bsel, beta * self.r[yb], axis=-1)
+        selb = jnp.take_along_axis(yb, jdx[:, None], 1)[:, 0]
+        return GSITrials(jnp.where(accept, sel, selb), sel, accept)
+
+    def run_sbon(self, rng, *, n: int, beta: float, base: bool,
+                 trials: int = 200_000):
+        """Plain S-BoN with pi_B (base=True) or pi_S."""
+        pi = self.pi_B if base else self.pi_S
+        k1, k2 = jax.random.split(rng)
+        ys = jax.random.categorical(k1, jnp.log(pi)[None, :],
+                                    shape=(trials, n))
+        idx = jax.random.categorical(k2, beta * self.r[ys], axis=-1)
+        return jnp.take_along_axis(ys, idx[:, None], 1)[:, 0]
+
+    # -- empirical distribution helpers -------------------------------------
+    def histogram(self, outcomes):
+        counts = jnp.bincount(outcomes, length=self.m)
+        return counts / outcomes.shape[0]
+
+
+def _softmax(x):
+    e = np.exp(x - np.max(x))
+    return e / e.sum()

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticReasoningTask, VOCAB, PAD, SEP, EOS)
+from repro.data.lm import lm_batches  # noqa: F401

@@ -1,0 +1,32 @@
+"""Process-wide mesh context.
+
+``jax.shard_map`` layers (MoE expert parallelism) need the active mesh at
+trace time; launch scripts set it here so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH = prev

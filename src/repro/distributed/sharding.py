@@ -1,0 +1,178 @@
+"""Logical-axis -> mesh-axis sharding rules (FSDP / TP / EP / SP).
+
+Parameters carry logical axis names (ParamSpec.axes); these rules map them to
+mesh axes per run-mode, with automatic divisibility fallback (e.g. gemma3's
+4 query heads cannot shard 16-way -> replicated, TP lands on mlp/vocab dims
+instead).  Cache and input shardings are derived structurally: batch over
+(pod, data) when divisible, otherwise sequence-parallel over 'data'
+(long_500k's batch=1 KV cache).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec, is_param_spec
+
+# logical axis -> preferred mesh axes, per mode
+RULES = {
+    "train": {
+        "embed": ("data",),          # FSDP: shard weights over data axis
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv": ("model",),
+        "head": None,
+        "mlp": ("model",),
+        "mlp_out": None,
+        "heads_flat": ("model",),
+        "expert": ("model",),        # expert parallelism
+        "expert_in": ("model",),
+        "expert_mlp": ("data",),     # EP x FSDP for the 1T config
+        "layer": None,
+        None: None,
+    },
+    "serve": {
+        "embed": None,               # weights replicated over data (serving)
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv": ("model",),
+        "head": None,
+        "mlp": ("model",),
+        "mlp_out": None,
+        "heads_flat": ("model",),
+        "expert": ("model",),
+        "expert_in": ("model",),
+        "expert_mlp": ("data",),     # kimi-scale: EP over model x data
+        "layer": None,
+        None: None,
+    },
+}
+
+
+def _axes_size(mesh_shape: dict, axes) -> int:
+    return math.prod(mesh_shape[a] for a in axes)
+
+
+def spec_pspec(s: ParamSpec, mesh, mode: str) -> P:
+    """PartitionSpec for one ParamSpec under the mode's rules.
+
+    REPRO_EMBED_RULE=none overrides the train-mode FSDP rule (embed->data)
+    to replication — the §Perf H1 experiment knob (GSPMD lowers
+    contracting-dim-sharded weights into per-layer activation all-reduces;
+    pure TP+DP avoids them at the cost of replicated weight memory).
+    """
+    import os
+    rules = dict(RULES[mode])
+    if mode == "train" and os.environ.get("REPRO_EMBED_RULE") == "none":
+        rules["embed"] = None
+    shape = dict(zip(mesh.axis_names, mesh.shape.values())) \
+        if hasattr(mesh.shape, "values") else dict(
+            zip(mesh.axis_names, mesh.devices.shape))
+    entries = []
+    used = set()
+    for dim, logical in zip(s.shape, s.axes):
+        axes = rules.get(logical)
+        if axes and all(a in shape for a in axes) \
+                and dim % _axes_size(shape, axes) == 0 \
+                and not (set(axes) & used):
+            entries.append(axes[0] if len(axes) == 1 else tuple(axes))
+            used.update(axes)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def param_pspecs(spec_tree, mesh, mode: str):
+    return jax.tree.map(lambda s: spec_pspec(s, mesh, mode), spec_tree,
+                        is_leaf=is_param_spec)
+
+
+def param_shardings(spec_tree, mesh, mode: str):
+    return jax.tree.map(lambda s: NamedSharding(mesh, spec_pspec(s, mesh,
+                                                                 mode)),
+                        spec_tree, is_leaf=is_param_spec)
+
+
+# ---------------------------------------------------------------------------
+# Structural shardings for runtime arrays (caches, batches, opt state)
+# ---------------------------------------------------------------------------
+
+def mesh_axis_sizes(mesh) -> dict:
+    return {a: s for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+
+
+def batch_pspec(mesh, batch: int):
+    """Shard a leading batch dim over (pod,data) / data / nothing."""
+    sizes = mesh_axis_sizes(mesh)
+    cand = [ax for ax in (("pod", "data"), ("data",))
+            if all(a in sizes for a in ax)]
+    for axes in cand:
+        if batch % _axes_size(sizes, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def data_batch_sharding(mesh, batch: int, ndim: int):
+    """NamedSharding for (B, ...) host batches (tokens, masks)."""
+    b = batch_pspec(mesh, batch)
+    return NamedSharding(mesh, P(b, *([None] * (ndim - 1))))
+
+
+def cache_pspecs(cache_shapes, mesh, *, stacked_key: str = "blocks"):
+    """PartitionSpec tree for a decode cache (ShapeDtypeStruct tree).
+
+    Attention caches (B,S,KV,hd) [stacked: (R,B,S,KV,hd)]: batch over
+    (pod,)data when divisible; otherwise the sequence dim goes over 'data'
+    (sequence parallelism).  KV-head dims shard over 'model' when divisible.
+    Recurrent states (B,H,hd,hd)/(B,w): batch over data, head over model.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    model_ok = "model" in sizes
+
+    def leaf_spec(path, leaf):
+        is_stacked = any(getattr(p, "key", None) == stacked_key
+                         for p in path)
+        lead = 1 if is_stacked else 0
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        b = shape[lead]
+        bspec = batch_pspec(mesh, b)
+        if bspec is not None:
+            entries[lead] = bspec
+            data_used = True
+        else:
+            data_used = False
+        # remaining dims: try model on a divisible "heads-like" dim;
+        # for 4/5-D attention caches dim lead+1 is sequence.
+        if len(shape) - lead >= 3:
+            seq_dim = lead + 1
+            head_dim = lead + 2
+            seq_axes = []
+            if model_ok and shape[head_dim] % sizes["model"] == 0 \
+                    and shape[head_dim] > 1:
+                entries[head_dim] = "model"
+            elif model_ok and os.environ.get("REPRO_CACHE_SEQ_SHARD") == "1" \
+                    and shape[seq_dim] % sizes["model"] == 0:
+                # §Perf H2 iter-2: kv-heads not divisible by the model axis
+                # (e.g. kimi kv=8 on a 16-way axis) -> sequence-shard the KV
+                # cache over 'model' instead of replicating it.
+                seq_axes.append("model")
+            if not data_used and "data" in sizes \
+                    and shape[seq_dim] % sizes["data"] == 0:
+                seq_axes.append("data")     # sequence parallelism
+            if seq_axes:
+                entries[seq_dim] = (seq_axes[0] if len(seq_axes) == 1
+                                    else tuple(seq_axes))
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def as_shardings(pspec_tree, mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

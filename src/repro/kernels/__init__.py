@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute of GSI serving.
+
+Each kernel lives in <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with the jit'd dispatch wrapper in ops.py and the pure-jnp oracle in
+ref.py.  Validated in interpret mode on CPU (tests/test_kernels.py).
+"""
+from repro.kernels import ops, ref  # noqa: F401

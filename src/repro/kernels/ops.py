@@ -1,0 +1,64 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy (env ``REPRO_USE_PALLAS``):
+  "0" (default)  — pure-jnp reference path (CPU, dry-run lowering)
+  "1"            — Pallas kernels, compiled for TPU
+  "interpret"    — Pallas kernels in interpret mode (CPU correctness tests)
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _mode() -> str:
+    return os.environ.get("REPRO_USE_PALLAS", "0")
+
+
+def _interpret() -> bool:
+    return _mode() == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# logprob_gather — the GSI scoring hot-spot
+# ---------------------------------------------------------------------------
+
+def logprob_gather(h, w, labels, vocab_size: int):
+    """Fused log-softmax + label gather over the vocab dim.
+
+    h: (B,S,d); w: (d,V); labels: (B,S) -> (B,S) fp32 log-probs.
+    """
+    if _mode() == "0":
+        return ref.logprob_gather_ref(h, w, labels, vocab_size)
+    from repro.kernels.logprob_gather import logprob_gather_pallas
+    return logprob_gather_pallas(h, w, labels, vocab_size,
+                                 interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill / train)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    if _mode() == "0":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 chunked scan
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan(r, k, v, w, u, state):
+    if _mode() == "0":
+        return ref.rwkv6_scan_ref(r, k, v, w, u, state)
+    from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+    return rwkv6_scan_pallas(r, k, v, w, u, state, interpret=_interpret())

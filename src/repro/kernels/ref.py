@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def logprob_gather_ref(h, w, labels, vocab_size: int):
+    """log softmax(h @ w)[labels].
+
+    h: (B,S,d); w: (d,V); labels: (B,S) int -> (B,S) float32.
+    """
+    logits = (h.astype(jnp.float32) @ w.astype(jnp.float32))
+    v = logits.shape[-1]
+    if vocab_size < v:
+        mask = jnp.arange(v) < vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return picked - logz
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state):
+    """Sequential WKV6 recurrence.
+
+    r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) fp32.
+    Returns (out (B,T,H,hd) fp32, final state).
+    """
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkn->bhn", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), S

@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# chunked-parallel WKV for lowering (see models/rwkv.py::_use_chunked):
+# the per-token sequential scan is exact but compiles pathologically when
+# layers are unrolled, and XLA cost-analysis can't see through its loop.
+os.environ.setdefault("REPRO_RWKV_CHUNKED", "1")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+For each combination this builds the real jitted program (train_step /
+prefill / serve_step) with production shardings, lowers it against
+ShapeDtypeStruct inputs (no allocation), compiles it for the 256-chip
+single-pod and 512-chip two-pod meshes, and records memory analysis,
+cost analysis and the roofline terms (repro.roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun.json
+
+NOTE: the XLA_FLAGS line above must run before ANY jax import (jax locks
+the device count on first init); do not import this module from processes
+that need the single real CPU device.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (SHAPES, TrainConfig, get_config, ModelConfig)
+from repro.configs import ASSIGNED
+from repro.distributed import context as dctx
+from repro.distributed.sharding import (as_shardings, batch_pspec,
+                                        cache_pspecs, param_pspecs)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.roofline import roofline_terms
+from repro.roofline.analysis import model_flops_estimate
+from repro.train import make_train_step
+
+LONG_WINDOW = 4096  # sliding-window variant for full-attention archs
+
+
+def is_native_subquadratic(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid") or "local" in cfg.layer_pattern
+
+
+def arch_for_shape(cfg: ModelConfig, shape_name: str,
+                   *, scan_layers: bool = False) -> ModelConfig:
+    if shape_name == "long_500k" and not is_native_subquadratic(cfg):
+        # DESIGN.md §4: dense/full-attention archs serve long context with
+        # the sliding-window variant (ring KV cache of LONG_WINDOW).
+        cfg = dataclasses.replace(cfg, serve_window_override=LONG_WINDOW)
+    # Unroll layers for the dry-run: XLA's cost_analysis counts while-loop
+    # bodies once (verified), so scanned stacks would under-report the
+    # roofline terms by ~num_layers x.  Production training keeps the scan.
+    if not scan_layers:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    return cfg
+
+
+def _source_shape(cfg: ModelConfig, batch: int):
+    if cfg.encoder_layers:
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.cross_source_seq:
+        return jax.ShapeDtypeStruct((batch, cfg.cross_source_seq,
+                                     cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh,
+                    *, transform: bool = True):
+    """Returns (fn, args, in_shardings, model_flops)."""
+    shape = SHAPES[shape_name]
+    if transform:
+        cfg = arch_for_shape(cfg, shape_name)
+    model = build_model(cfg)
+    spec_tree = model.param_specs()
+    B, S = shape.global_batch, shape.seq_len
+    bspec = batch_pspec(mesh, B)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    src = _source_shape(cfg, B)
+
+    if shape.kind == "train":
+        mode = "train"
+        p_sh = as_shardings(param_pspecs(spec_tree, mesh, mode), mesh)
+        big = cfg.param_count() > 3e11
+        tcfg = TrainConfig(opt_state_dtype="bfloat16" if big else "float32")
+        opt = AdamW(tcfg)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        opt_sh = {"m": p_sh, "v": p_sh,
+                  "count": NamedSharding(mesh, P())}
+        batch_shape = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+        batch_sh = {k: NamedSharding(mesh, P(bspec, None))
+                    for k in batch_shape}
+        if src is not None:
+            batch_shape["source"] = src
+            batch_sh["source"] = NamedSharding(mesh, P(bspec, None, None))
+        fn = make_train_step(cfg, tcfg, with_source=src is not None)
+        args = (params_shape, opt_shape, batch_shape)
+        shardings = (p_sh, opt_sh, batch_sh)
+        mflops = model_flops_estimate(cfg, B * S, "train") / mesh.devices.size
+
+    elif shape.kind == "prefill":
+        mode = "serve"
+        p_sh = as_shardings(param_pspecs(spec_tree, mesh, mode), mesh)
+        toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(bspec, None))
+        if src is not None:
+            def fn(params, tokens, source):
+                return model.prefill(params, tokens, source=source,
+                                     max_seq=S)
+            args = (params_shape, toks, src)
+            shardings = (p_sh, tok_sh,
+                         NamedSharding(mesh, P(bspec, None, None)))
+        else:
+            def fn(params, tokens):
+                return model.prefill(params, tokens, max_seq=S)
+            args = (params_shape, toks)
+            shardings = (p_sh, tok_sh)
+        mflops = model_flops_estimate(cfg, B * S, "prefill") / mesh.devices.size
+
+    else:  # decode
+        mode = "serve"
+        p_sh = as_shardings(param_pspecs(spec_tree, mesh, mode), mesh)
+        cache_shape = jax.eval_shape(lambda: model.init_cache(B, S))
+        cache_sh = as_shardings(cache_pspecs(cache_shape, mesh), mesh)
+        toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        vec_sh = NamedSharding(mesh, P(bspec))
+
+        def fn(params, cache, tokens, positions):
+            return model.decode_step(params, cache, tokens, positions)
+
+        args = (params_shape, cache_shape, toks, pos)
+        shardings = (p_sh, cache_sh, NamedSharding(mesh, P(bspec, None)),
+                     vec_sh)
+        mflops = model_flops_estimate(cfg, B, "decode") / mesh.devices.size
+
+    return fn, args, shardings, mflops
+
+
+def _compile_record(cfg, shape_name, mesh, chips, name, *,
+                    transform: bool = True):
+    fn, args, shardings, mflops = build_lowerable(cfg, shape_name, mesh,
+                                                  transform=transform)
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    rep = roofline_terms(name, compiled, chips=chips, model_flops=mflops,
+                         hlo_text=text)
+    return rep, mem, t_lower, t_compile
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            *, keep_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "status": "error"}
+    t0 = time.time()
+    name = f"{arch}/{shape_name}/{mesh_kind}"
+    seq_heavy = SHAPES[shape_name].kind in ("train", "prefill")
+    try:
+        with dctx.use_mesh(mesh):
+            if cfg.family == "ssm" and seq_heavy:
+                # Two-point accounting: the WKV sequence work makes the
+                # unrolled stack pathological to compile, so compile the
+                # scanned stack with 1-layer and 2-layer scan bodies and
+                # extrapolate the exact per-device costs
+                # (cost_analysis counts scan bodies once):
+                #   F(total) = F1 + (num_layers - 1) * (F2 - F1).
+                os.environ["REPRO_RWKV_CHUNK"] = str(
+                    max(256, SHAPES[shape_name].seq_len // 16))
+                cfg1 = dataclasses.replace(cfg, scan_layers=True)
+                cfg2 = dataclasses.replace(cfg, scan_layers=True,
+                                           layer_pattern=("full", "full"))
+                rep1, mem, tl, tc = _compile_record(
+                    arch_for_shape(cfg1, shape_name, scan_layers=True),
+                    shape_name, mesh, chips, name, transform=False)
+                rep2, _, tl2, tc2 = _compile_record(
+                    arch_for_shape(cfg2, shape_name, scan_layers=True),
+                    shape_name, mesh, chips, name, transform=False)
+                L = cfg.num_layers
+                rep = rep1
+                rep.flops = rep1.flops + (L - 1) * (rep2.flops - rep1.flops)
+                rep.bytes_accessed = rep1.bytes_accessed + (L - 1) * (
+                    rep2.bytes_accessed - rep1.bytes_accessed)
+                # collective bytes: the HLO parser already multiplies scan
+                # bodies by known_trip_count; rep1 is the full program.
+                t_lower, t_compile = tl + tl2, tc + tc2
+                rec["accounting"] = "ssm-two-point"
+            else:
+                rep, mem, t_lower, t_compile = _compile_record(
+                    arch_for_shape(cfg, shape_name), shape_name, mesh,
+                    chips, name)
+        rec.update(rep.as_dict())
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            bytes_per_device=getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+            arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_bytes=getattr(mem, "output_size_in_bytes", 0),
+            peak_bytes=getattr(mem, "peak_memory_in_bytes", 0),
+        )
+        if keep_hlo:
+            rec["hlo_len"] = len(text)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED) if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = {}
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                key = f"{arch}|{shape}|{mk}"
+                if results.get(key, {}).get("status") == "ok":
+                    print(f"[skip] {key}", flush=True)
+                    continue
+                print(f"[run ] {key}", flush=True)
+                rec = run_one(arch, shape, mk)
+                results[key] = rec
+                if rec["status"] == "ok":
+                    print(f"  ok  compile={rec['compile_s']}s "
+                          f"flops={rec['hlo_flops']:.3e} "
+                          f"coll={rec['collective_bytes']:.3e}B "
+                          f"dom={rec['dominant']} "
+                          f"mem/dev={rec['peak_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                else:
+                    print(f"  ERR {rec['error']}", flush=True)
+                if args.out:
+                    os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                                exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    bad = [k for k, v in results.items() if v.get("status") != "ok"]
+    print(f"\n{len(results) - len(bad)}/{len(results)} OK; failures: {bad}")
+
+
+if __name__ == "__main__":
+    main()

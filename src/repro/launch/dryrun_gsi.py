@@ -1,0 +1,155 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run of the GSI serving phases at paper scale (hillclimb target #3).
+
+Lowers the *target-scoring* pass of Algorithm 1 — compute log pi_B(y_i|x)
+for n draft candidate steps against a committed context — for the paper's
+Qwen2.5-Math-7B target on the production mesh, in two implementations:
+
+  baseline  — the paper-faithful n-copy scoring: the committed KV cache is
+              repeated n times and candidates are teacher-forced through
+              decode steps (a scan over L tokens).
+  shared    — beyond-paper shared-prefix scoring (models/scoring.py): all n
+              candidates attend to ONE shared cache; no copies, no scan.
+
+Also lowers the fused "tilted select" epilogue (rewards + logp -> softmax
+sample + threshold), which is negligible but completes Algorithm 1.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_gsi --out results/gsi.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import get_config
+from repro.distributed import context as dctx
+from repro.distributed.sharding import (as_shardings, batch_pspec,
+                                        cache_pspecs, param_pspecs)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.scoring import score_candidates
+from repro.roofline import roofline_terms
+
+# serving shape: 8 requests/pod-slice, n=16 candidates, 128-token steps,
+# 2048-token committed context (paper: ~220-token steps, ~10 steps)
+B, N, L, CTX = 16, 16, 128, 2048
+
+
+def build(kind: str, mesh, arch: str = "qwen2.5-math-7b",
+          scan_layers: bool = True):
+    cfg = dataclasses.replace(get_config(arch), scan_layers=scan_layers)
+    model = build_model(cfg)
+    spec_tree = model.param_specs()
+    p_sh = as_shardings(param_pspecs(spec_tree, mesh, "serve"), mesh)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(lambda: model.init_cache(B, CTX + 2 * L))
+    cache_sh = as_shardings(cache_pspecs(cache_shape, mesh), mesh)
+    bspec = batch_pspec(mesh, B)
+    pend = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    vec_sh = NamedSharding(mesh, P(bspec))
+
+    if kind == "shared":
+        cands = jax.ShapeDtypeStruct((B, N, L), jnp.int32)
+        # shared scoring keeps the request dim at B (not B*N): when B is
+        # smaller than the (pod x data) batch ways, shard the candidate dim
+        # over 'pod' so the multi-pod mesh still parallelizes the pass.
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        cand_spec = P(bspec, None, None)
+        if "pod" in sizes and bspec == "data" and N % sizes["pod"] == 0:
+            cand_spec = P("data", "pod", None)
+
+        def fn(params, cache, pending, positions, cand):
+            return score_candidates(model, params, cache, pending,
+                                    positions, cand)
+
+        args = (params_shape, cache_shape, pend, pos, cands)
+        sh = (p_sh, cache_sh, vec_sh, vec_sh,
+              NamedSharding(mesh, cand_spec))
+    else:
+        # baseline (paper-faithful): each candidate scores against its OWN
+        # copy of the committed cache.  Expressed as the same scoring
+        # program with an N-times repeated cache and per-row candidates, so
+        # the HLO accounting isolates exactly the shared-prefix saving
+        # (identical FLOPs; cache bytes/collectives scale by N).
+        from repro.serving.engine import expand_requests, repeat_cache
+        cands = jax.ShapeDtypeStruct((B * N, 1, L), jnp.int32)
+        big_cache_shape = jax.eval_shape(
+            lambda c: repeat_cache(c, N), cache_shape)
+        big_cache_sh = as_shardings(cache_pspecs(big_cache_shape, mesh),
+                                    mesh)
+        pend_n = jax.ShapeDtypeStruct((B * N,), jnp.int32)
+        bspec_n = batch_pspec(mesh, B * N)
+        vec_n = NamedSharding(mesh, P(bspec_n))
+
+        def fn(params, cache, pending, positions, cand):
+            lp = score_candidates(model, params, cache, pending,
+                                  positions, cand)
+            return lp.reshape(B, N)
+
+        args = (params_shape, big_cache_shape, pend_n, pend_n, cands)
+        sh = (p_sh, big_cache_sh, vec_n, vec_n,
+              NamedSharding(mesh, P(bspec_n, None, None)))
+    return fn, args, sh, cfg
+
+
+def run_one(kind: str, mesh_kind: str = "single") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"kind": kind, "mesh": mesh_kind, "status": "error"}
+    t0 = time.time()
+    try:
+        with dctx.use_mesh(mesh):
+            fn, args, sh, cfg = build(kind, mesh)
+            compiled = jax.jit(fn, in_shardings=sh).lower(*args).compile()
+            mem = compiled.memory_analysis()
+            rep = roofline_terms(f"gsi-score-{kind}", compiled,
+                                 chips=mesh.devices.size,
+                                 model_flops=2.0 * cfg.param_count() * B * N
+                                 * L / mesh.devices.size)
+        rec.update(rep.as_dict())
+        rec.update(status="ok",
+                   peak_bytes=getattr(mem, "peak_memory_in_bytes", 0),
+                   arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+                   compile_s=round(time.time() - t0, 1))
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-1500:]
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/gsi_dryrun.json")
+    ap.add_argument("--kinds", default="baseline,shared")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    for kind in args.kinds.split(","):
+        key = f"{kind}|{args.mesh}"
+        if results.get(key, {}).get("status") == "ok":
+            print(f"[skip] {key}")
+            continue
+        print(f"[run ] {key}", flush=True)
+        rec = run_one(kind, args.mesh)
+        results[key] = rec
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k not in ("traceback",)}, default=str),
+              flush=True)
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import so 512 placeholder devices exist; smoke tests and benchmarks see the
+single real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests)."""
+    return jax.make_mesh(shape, axes)

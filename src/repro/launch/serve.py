@@ -1,0 +1,108 @@
+"""GSI serving launcher: train a draft/target/PRM triple on the synthetic
+reasoning task (or load checkpoints), then serve batched requests with GSI
+and report accuracy / acceptance / latency-model numbers.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 16 --n 4 \
+        --method gsi [--train-steps 300]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.config import GSIConfig, ModelConfig, TrainConfig
+from repro.data import SyntheticReasoningTask, PAD
+from repro.serving import GSIServingEngine
+from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
+from repro.train import Trainer
+
+
+def toy_triple(vocab: int = 16):
+    """Small draft / larger target / PRM configs for the synthetic task."""
+    draft = ModelConfig(
+        name="sx-draft", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=192, vocab_size=vocab, head_dim=16,
+        dtype="float32", param_dtype="float32")
+    target = dataclasses.replace(draft, name="sx-target", num_layers=4,
+                                 d_model=160, head_dim=40, d_ff=448)
+    prm = dataclasses.replace(target, name="sx-prm", reward_head=True)
+    return draft, target, prm
+
+
+def train_triple(task, draft_cfg, target_cfg, prm_cfg, *, steps_draft=200,
+                 steps_target=600, batch=32, seq=64, seed=0):
+    """Target trained longer => genuinely stronger than the draft."""
+    tc = TrainConfig(learning_rate=1e-3, total_steps=steps_target,
+                     warmup_steps=20, seed=seed)
+    tr_s = Trainer(draft_cfg, dataclasses.replace(tc,
+                                                  total_steps=steps_draft))
+    tr_s.fit((task.lm_batch(batch, seq) for _ in iter(int, 1)), steps_draft)
+    tr_b = Trainer(target_cfg, tc)
+    tr_b.fit((task.lm_batch(batch, seq) for _ in iter(int, 1)), steps_target)
+    tr_p = Trainer(prm_cfg, tc, prm=True)
+    tr_p.fit((task.prm_batch(batch, seq) for _ in iter(int, 1)),
+             steps_target)
+    return tr_s.params, tr_b.params, tr_p.params
+
+
+def evaluate(engine, task, problems, rng):
+    Lp = max(len(p.prompt) for p in problems)
+    prompts = np.zeros((len(problems), Lp), np.int32)
+    for i, p in enumerate(problems):
+        prompts[i, :len(p.prompt)] = p.prompt
+    t0 = time.time()
+    responses, stats = engine.run(prompts, rng)
+    wall = time.time() - t0
+    correct = 0
+    for prob, steps in zip(problems, responses):
+        flat = [t for s in steps for t in s]
+        correct += task.is_correct(prob, flat)
+    return {"accuracy": correct / len(problems),
+            "accept_rate": stats.accept_rate, "steps": stats.steps,
+            "wall_s": wall, "stats": stats}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--n", type=int, default=4)
+    ap.add_argument("--method", default="gsi",
+                    choices=["gsi", "gsi_norej", "rsd", "sbon_s", "sbon_b"])
+    ap.add_argument("--beta", type=float, default=20.0)
+    ap.add_argument("--u", type=float, default=0.5)
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    task = SyntheticReasoningTask(seed=args.seed)
+    draft_cfg, target_cfg, prm_cfg = toy_triple()
+    print("training draft/target/PRM triple ...", flush=True)
+    ps, pb, pp = train_triple(task, draft_cfg, target_cfg, prm_cfg,
+                              steps_draft=args.train_steps // 2,
+                              steps_target=args.train_steps, seed=args.seed)
+
+    g = GSIConfig(n=args.n, beta=args.beta, threshold_u=args.u,
+                  max_step_tokens=8, max_steps=8)
+    engine = GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
+                              mode=args.method, max_seq=128)
+    problems = [task.sample_problem() for _ in range(args.requests)]
+    res = evaluate(engine, task, problems, jax.random.PRNGKey(args.seed + 1))
+    print(f"method={args.method} n={args.n}: accuracy={res['accuracy']:.3f} "
+          f"accept={res['accept_rate']:.2f} steps={res['steps']} "
+          f"wall={res['wall_s']:.1f}s")
+
+    lm = LatencyModel(
+        ModelCost(draft_cfg.param_count(), 1024),
+        ModelCost(target_cfg.param_count(), 4096),
+        ModelCost(prm_cfg.param_count(), 4096), HW_V5E)
+    t = lm.step_time(method=args.method, n=args.n, step_len=6, ctx_len=64,
+                     accept_rate=res["accept_rate"])
+    print(f"latency-model seconds/step on {HW_V5E.name}: {t:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,174 @@
+"""Shared model machinery: ParamSpec trees, init, norms, RoPE, FFN.
+
+Single source of truth for parameters: every module builds a pytree of
+:class:`ParamSpec` (shape + logical axis names + initializer).  The same tree
+is used to (a) materialize parameters and (b) derive PartitionSpecs via the
+logical-axis rules in ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# ParamSpec machinery
+# ---------------------------------------------------------------------------
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | embed | uniform_decay
+    scale: float = 1.0    # stddev multiplier for "normal"
+
+
+def spec(shape, axes, init="normal", scale=1.0) -> ParamSpec:
+    assert len(shape) == len(axes), (shape, axes)
+    return ParamSpec(tuple(int(s) for s in shape), tuple(axes), init, scale)
+
+
+def is_param_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_param_spec)
+
+
+def stack_specs(tree, n: int):
+    """Add a leading 'layer' (scan) dimension to every spec in the tree."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layer",) + s.axes, s.init, s.scale),
+        tree)
+
+
+def init_params(spec_tree, rng, param_dtype):
+    """Materialize a spec tree into arrays (deterministic per-leaf folding)."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_param_spec)
+    arrays = []
+    for i, s in enumerate(leaves):
+        key = jax.random.fold_in(rng, i)
+        arrays.append(_materialize(s, key, param_dtype))
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def _materialize(s: ParamSpec, key, dtype):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    if s.init == "uniform_decay":
+        # RG-LRU lambda parametrization: a = sigmoid(L) in [0.9, 0.999]
+        u = jax.random.uniform(key, s.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(u) - jnp.log1p(-u)
+        return lam.astype(dtype)
+    # fan-in scaled normal; embeddings scale by 1.0
+    if s.init == "embed":
+        std = 1.0
+    else:
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        # stacked specs carry a leading layer dim -> fan-in is dim -2 of the
+        # trailing matrix; for 3D projection tensors (d, H, hd) fan-in = d.
+        if len(s.shape) >= 3:
+            fan_in = s.shape[-3] if s.axes[-1] == "head" else s.shape[-2]
+        std = 1.0 / math.sqrt(max(1, fan_in))
+    arr = jax.random.normal(key, s.shape, jnp.float32) * (std * s.scale)
+    return arr.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Numerics helpers
+# ---------------------------------------------------------------------------
+
+def adtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x, gamma, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def norm_spec(d):
+    return spec((d,), ("embed",), "zeros")  # "1+gamma" parametrization
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponents = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU) — the dense MLP used by every non-ssm family
+# ---------------------------------------------------------------------------
+
+def ffn_specs(d, ff):
+    return {
+        "wi_gate": spec((d, ff), ("embed", "mlp")),
+        "wi_up": spec((d, ff), ("embed", "mlp")),
+        "wo": spec((ff, d), ("mlp", "embed")),
+    }
+
+
+def ffn_apply(p, x):
+    gate = jax.nn.silu(x @ p["wi_gate"])
+    h = gate * (x @ p["wi_up"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def padded_vocab(cfg) -> int:
+    """Vocab padded to a multiple of 512 for clean TP sharding + MXU tiles."""
+    return round_up(cfg.vocab_size, 512)
+
+
+def embed_specs(cfg):
+    v = padded_vocab(cfg)
+    s = {"embedding": spec((v, cfg.d_model), ("vocab", "embed"), "embed")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = spec((cfg.d_model, v), ("embed", "vocab"))
+    return s
+
+
+def embed_tokens(cfg, p, tokens):
+    return p["embedding"].astype(adtype(cfg))[tokens]
+
+
+def unembed(cfg, p, x):
+    w = p["unembed"] if "unembed" in p else p["embedding"].T
+    logits = (x @ w.astype(x.dtype)).astype(jnp.dtype(cfg.logit_dtype))
+    v = padded_vocab(cfg)
+    if v != cfg.vocab_size:
+        # mask padding rows so they never win a softmax
+        mask = jnp.arange(v) < cfg.vocab_size
+        logits = jnp.where(mask, logits, -1e30)
+    return logits

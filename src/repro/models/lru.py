@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [linear branch + gelu gate branch]; the linear branch goes
+through a width-4 causal depthwise conv then the Real-Gated LRU:
+
+    r_t = sigmoid(W_a x_t + b_a)         (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)         (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence
+(parallel prefix); decode is a single-step update.  State: h (B,w) fp32 +
+conv tail (B,3,w).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import adtype, spec
+
+LRU_C = 8.0
+CONV_W = 4
+
+
+def recurrent_specs(cfg):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "wx": spec((d, w), ("embed", "mlp")),
+        "wgate": spec((d, w), ("embed", "mlp")),
+        "conv_w": spec((CONV_W, w), (None, "mlp"), scale=0.5),
+        "wa": spec((w, w), ("mlp", "mlp_out")),
+        "ba": spec((w,), ("mlp",), "zeros"),
+        "wi": spec((w, w), ("mlp", "mlp_out")),
+        "bi": spec((w,), ("mlp",), "zeros"),
+        "lam": spec((w,), ("mlp",), "uniform_decay"),
+        "wo": spec((w, d), ("mlp", "embed")),
+    }
+
+
+def init_lru_state(cfg, batch: int):
+    w = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, w), adtype(cfg)),
+    }
+
+
+def _causal_conv(p, xb, conv_state):
+    """Depthwise causal conv width 4. xb: (B,T,w); conv_state: (B,3,w)."""
+    ext = jnp.concatenate([conv_state, xb], axis=1)  # (B,T+3,w)
+    T = xb.shape[1]
+    out = sum(ext[:, i:i + T] * p["conv_w"][i] for i in range(CONV_W))
+    new_state = ext[:, -(CONV_W - 1):]
+    return out, new_state
+
+
+def _lru_scan(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t via associative scan; h0: (B,w)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = aa * h0[:, None] + bb
+    return h
+
+
+def recurrent_block(cfg, p, x, state, mode: str):
+    """x: (B,T,d) -> (y, new_state)."""
+    xb = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wgate"])
+    xc, conv_state = _causal_conv(p, xb, state["conv"])
+
+    r = jax.nn.sigmoid(xc @ p["wa"] + p["ba"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["wi"] + p["bi"]).astype(jnp.float32)
+    log_a = -LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (
+        i * xc.astype(jnp.float32))
+
+    if x.shape[1] == 1:  # decode
+        h = a[:, 0] * state["h"] + b[:, 0]
+        h_seq = h[:, None]
+    else:
+        h_seq = _lru_scan(a, b, state["h"])
+        h = h_seq[:, -1]
+
+    y = (gate * h_seq.astype(x.dtype)) @ p["wo"]
+    return y, {"h": h, "conv": conv_state}

@@ -1,0 +1,193 @@
+"""Shared-prefix candidate scoring — beyond-paper optimization (§Perf).
+
+The paper scores the n draft candidates under pi_B with "a single forward
+pass", but a cache-based implementation naively materializes n copies of the
+committed KV cache (the baseline engine does exactly that, via
+``repeat_cache``).  This module scores all n candidates against ONE shared
+cache with a two-block attention:
+
+    scores(q_cand, [shared_cache  |  own_candidate_prefix])
+
+so the committed prefix is read once per request instead of n times, and the
+n* cache-copy HBM footprint disappears.  Scoring is read-only (no cache
+writes), so the whole pass is a pure map — ideal for XLA.
+
+Supports every family: attention caches (full / ring-buffer local / cross)
+via the joint softmax below; recurrent families (rwkv / RG-LRU) broadcast
+their O(1) state n-ways and run the normal sequence path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import lru, moe, rwkv
+from repro.models.common import (adtype, apply_rope, embed_tokens, ffn_apply,
+                                 rms_norm, unembed)
+
+NEG = -1e30
+
+
+def _slot_abs_positions(pos, size):
+    """abs position held by ring slot j given next-write position ``pos``.
+
+    a_j = pos-1 - ((pos-1-j) mod size); a_j < 0 means the slot is empty.
+    Works for full caches too (size >= pos -> a_j = j for j < pos).
+    """
+    j = jnp.arange(size)[None, :]
+    p1 = pos[:, None] - 1
+    return p1 - jnp.mod(p1 - j, size)
+
+
+def score_attention(cfg, p, x, *, cache, pos, n, kind, window_override=0):
+    """x: (B*n, L, d); cache: {'k','v'} (B, S, KV, hd); pos: (B,).
+
+    Returns attention output (B*n, L, H, hd-flattened d).  No cache writes.
+    """
+    BN, L, _ = x.shape
+    B = pos.shape[0]
+    N = BN // B
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    scale = hd ** -0.5
+    window = cfg.window_size if kind == "local" else 0
+    if window_override:
+        window = window_override if window == 0 else min(window,
+                                                         window_override)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+
+    qabs = jnp.repeat(pos, N)[:, None] + jnp.arange(L)[None, :]  # (BN, L)
+    q = apply_rope(q, qabs, cfg.rope_theta)
+    k = apply_rope(k, qabs, cfg.rope_theta)
+
+    qr = q.reshape(B, N, L, KV, G, hd)
+    kr = k.reshape(B, N, L, KV, hd)
+    vr = v.reshape(B, N, L, KV, hd)
+    ck, cv = cache["k"], cache["v"]
+    S = ck.shape[1]
+
+    # --- scores against the shared committed cache ---------------------
+    sc = jnp.einsum("bnlkgh,bskh->bnkgls", qr, ck,
+                    preferred_element_type=jnp.float32) * scale
+    a = _slot_abs_positions(pos, S)                     # (B, S)
+    qa = pos[:, None] + jnp.arange(L)[None, :]          # (B, L)
+    mask_c = (a[:, None, :] >= 0) & (a[:, None, :] < pos[:, None, None])
+    if window:
+        mask_c &= a[:, None, :] > qa[:, :, None] - window
+    # mask_c: (B, 1 or L, S) -> broadcast over (B, N, KV, G, L, S)
+    sc = sc + jnp.where(mask_c[:, None, None, None, :, :], 0.0, NEG)
+
+    # --- causal scores within each candidate ----------------------------
+    ss = jnp.einsum("bnlkgh,bnmkh->bnkglm", qr, kr,
+                    preferred_element_type=jnp.float32) * scale
+    li = jnp.arange(L)
+    mask_s = li[:, None] >= li[None, :]
+    if window:
+        mask_s &= li[:, None] - li[None, :] < window
+    ss = ss + jnp.where(mask_s[None, None, None, None], 0.0, NEG)
+
+    # --- joint softmax over [cache | own prefix] -------------------------
+    joint = jnp.concatenate([sc, ss], axis=-1)
+    probs = jax.nn.softmax(joint, axis=-1).astype(x.dtype)
+    pc, ps = probs[..., :S], probs[..., S:]
+    out = jnp.einsum("bnkgls,bskh->bnlkgh", pc, cv) + \
+        jnp.einsum("bnkglm,bnmkh->bnlkgh", ps, vr)
+    out = out.reshape(BN, L, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _repeat_b(tree, n):
+    return jax.tree.map(lambda a: jnp.repeat(a, n, axis=0), tree)
+
+
+def score_block(cfg, kind, p, x, *, cache, pos, n, window_override=0):
+    """One decoder block in score mode. Returns x only (no cache)."""
+    if kind == "rwkv":
+        state = _repeat_b(cache, n)
+        y, _ = rwkv.rwkv_block(cfg, p, x, state, "extend")
+        return y, 0.0
+    aux = 0.0
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "recurrent":
+        state = _repeat_b(cache, n)
+        y, _ = lru.recurrent_block(cfg, p["rec"], h, state, "extend")
+    else:
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        y = score_attention(cfg, p["attn"], h, cache=self_cache, pos=pos, n=n,
+                            kind=("full" if kind in ("cross", "enc")
+                                  else kind),
+                            window_override=window_override)
+    x = x + y
+    if kind == "cross":
+        h = rms_norm(x, p["lnx"], cfg.norm_eps)
+        ckv = {"ck": jnp.repeat(cache["ck"], n, 0),
+               "cv": jnp.repeat(cache["cv"], n, 0)}
+        x = x + attn.cross_attention(cfg, p["xattn"], h, ckv)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        y, aux = moe.moe_ffn(cfg, p["ffn"], h)
+    else:
+        y = ffn_apply(p["ffn"], h)
+    return x + y, aux
+
+
+def score_candidates(model, params, cache, pending, pos, cand_tokens, *,
+                     return_rewards: bool = False):
+    """Score n candidate steps against one shared committed cache.
+
+    cand_tokens: (B, n, L) PAD-padded; pending/pos: (B,) engine invariant
+    (cache holds positions < pos; ``pending`` sits at pos, not yet cached).
+
+    Returns (logp (B,n)[, rewards (B,n)]) — log pi(cand | prefix) and the
+    PRM reward at each candidate's last real token.
+    """
+    cfg = model.cfg
+    B, n, L = cand_tokens.shape
+    feeds = jnp.concatenate(
+        [jnp.repeat(pending[:, None, None], n, axis=1), cand_tokens],
+        axis=2).reshape(B * n, L + 1)
+    x = embed_tokens(cfg, params["embed"], feeds)
+
+    def blk(kind, bp, h, c):
+        return score_block(cfg, kind, bp, h, cache=c, pos=pos, n=n,
+                           window_override=cfg.serve_window_override)
+
+    aux = 0.0
+    if model.repeats:
+        def body(carry, xs):
+            h = carry
+            bp, csl = xs
+            a = 0.0
+            for i, kind in enumerate(model.pattern):
+                h, ai = blk(kind, bp[f"p{i}"], h, csl[f"p{i}"])
+                a += ai
+            return h, a
+
+        x, _ = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    if model.remainder:
+        for i, kind in enumerate(model.remainder):
+            x, _ = blk(kind, params["rem"][f"r{i}"], x,
+                       cache["rem"][f"r{i}"])
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+    # log-probs of the candidate tokens (fused gather over vocab)
+    from repro.kernels import ops
+    w = params["embed"].get("unembed")
+    if w is None:
+        w = params["embed"]["embedding"].T
+    labels = cand_tokens.reshape(B * n, L)
+    lp_tok = ops.logprob_gather(x[:, :L], w, jnp.maximum(labels, 0),
+                                cfg.vocab_size)
+    live = labels != 0
+    logp = jnp.sum(jnp.where(live, lp_tok, 0.0), axis=1).reshape(B, n)
+    if not return_rewards:
+        return logp
+    lengths = jnp.sum(live, axis=1)                      # (B*n,)
+    h_at_end = jnp.take_along_axis(
+        x, lengths[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    rewards = model.reward_from_hidden(params, h_at_end).reshape(B, n)
+    return logp, rewards

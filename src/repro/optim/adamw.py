@@ -1,0 +1,80 @@
+"""AdamW + cosine schedule + global-norm clipping (pure JAX, optax-free)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def cosine_schedule(tcfg: TrainConfig) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = tcfg.learning_rate * step / max(1, tcfg.warmup_steps)
+        frac = jnp.clip((step - tcfg.warmup_steps) /
+                        max(1, tcfg.total_steps - tcfg.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac)) * tcfg.learning_rate
+        return jnp.where(step < tcfg.warmup_steps, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+class AdamW:
+    """Stateless namespace: init / update over arbitrary param pytrees."""
+
+    def __init__(self, tcfg: TrainConfig):
+        self.cfg = tcfg
+        self.lr_fn = cosine_schedule(tcfg)
+
+    def init(self, params):
+        dt = jnp.dtype(self.cfg.opt_state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        c = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+        count = state["count"] + 1
+        b1, b2 = c.beta1, c.beta2
+        dt = jnp.dtype(c.opt_state_dtype)
+
+        def upd_m(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(dt)
+
+        def upd_v(v, g):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32)
+                    + (1 - b2) * g32 * g32).astype(dt)
+
+        m = jax.tree.map(upd_m, state["m"], grads)
+        v = jax.tree.map(upd_v, state["v"], grads)
+        lr = self.lr_fn(count)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def step(p, mi, vi):
+            mh = mi.astype(jnp.float32) / bc1
+            vh = vi.astype(jnp.float32) / bc2
+            delta = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * \
+                p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(step, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}, \
+            {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,1 @@
+from repro.rewards.prm import PRM, OracleRewardModel  # noqa: F401

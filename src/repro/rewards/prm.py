@@ -1,0 +1,56 @@
+"""Process reward models.
+
+``PRM`` wraps a transformer with a scalar sigmoid head (rewards in [0,1],
+like Qwen2.5-Math-PRM-7B in the paper).  ``OracleRewardModel`` exposes the
+synthetic task's golden reward r* with the same interface — used to measure
+reward hacking / Theorem 2's golden-reward convergence.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import build_model
+
+
+class PRM:
+    """r(x, y): reward of a (prompt, partial-response) pair."""
+
+    def __init__(self, cfg: ModelConfig, params=None):
+        assert cfg.reward_head
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+
+    def init(self, rng):
+        self.params = self.model.init(rng)
+        return self.params
+
+    def reward_sequences(self, tokens, *, source=None):
+        """(B,S) tokens -> (B,S) per-position process rewards."""
+        return self.model.reward(self.params, tokens, source=source)
+
+    def reward_at_end(self, tokens, lengths, *, source=None):
+        """Reward at the last real token of each sequence -> (B,)."""
+        r = self.reward_sequences(tokens, source=source)
+        idx = jnp.maximum(lengths - 1, 0)
+        return jnp.take_along_axis(r, idx[:, None], axis=1)[:, 0]
+
+
+class OracleRewardModel:
+    """Golden reward r* for the synthetic reasoning task (host-side)."""
+
+    def __init__(self, task):
+        self.task = task
+
+    def reward(self, prob, step_tokens_so_far) -> float:
+        return self.task.golden_reward(prob, step_tokens_so_far)
+
+    def batch_reward(self, probs, steps_batch) -> np.ndarray:
+        return np.array([self.reward(p, s)
+                         for p, s in zip(probs, steps_batch)], np.float32)

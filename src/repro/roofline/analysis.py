@@ -1,0 +1,193 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS §Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  collective_bytes is
+parsed out of the optimized HLO: we sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+attributing ops inside while-loop bodies their known trip count (XLA
+annotates ``known_trip_count`` on scan-derived loops — our layer scans).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\([^)]*\)\s*->")
+_CALLEE_RE = re.compile(r"(?:to_apply|body|condition|branch_computations)="
+                        r"[{]?%?([\w\.\-_, %]+)[}]?")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = math.prod(int(d) for d in dims.split(","))
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class HLOCollectives:
+    per_comp_bytes: Dict[str, float] = field(default_factory=dict)
+    per_comp_ops: Dict[str, List[str]] = field(default_factory=dict)
+    calls: Dict[str, list] = field(default_factory=dict)  # comp -> [(callee, mult)]
+    entry: str = ""
+
+    def total_bytes(self, comp=None, _seen=None) -> float:
+        comp = comp or self.entry
+        _seen = _seen or set()
+        if comp in _seen or comp not in self.per_comp_bytes and \
+                comp not in self.calls:
+            pass
+        total = self.per_comp_bytes.get(comp, 0.0)
+        for callee, mult in self.calls.get(comp, []):
+            if callee == comp:
+                continue
+            total += mult * self.total_bytes(callee, _seen | {comp})
+        return total
+
+
+def collective_bytes(hlo_text: str) -> HLOCollectives:
+    """Parse optimized HLO; returns per-computation collective byte counts."""
+    res = HLOCollectives()
+    cur = None
+    pending_trip: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_RE.match(line)  # computation headers start at col 0
+        if m and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = m.group(1)
+            if line.startswith("ENTRY"):
+                res.entry = cur
+            continue
+        if cur is None:
+            continue
+        # collective ops (start variants also: "all-gather-start")
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"=\s.*\b{c}(-start)?\(", stripped):
+                op = c
+                break
+        if op:
+            lhs = stripped.split("=", 1)
+            type_part = lhs[1] if len(lhs) > 1 else stripped
+            type_part = type_part.split(op)[0]
+            b = _shape_bytes(type_part)
+            res.per_comp_bytes[cur] = res.per_comp_bytes.get(cur, 0.0) + b
+            res.per_comp_ops.setdefault(cur, []).append(
+                f"{op}:{b/1e6:.1f}MB")
+        # calls / control flow
+        cm = _CALLEE_RE.search(stripped)
+        if cm:
+            mult = 1
+            tm = _TRIP_RE.search(stripped)
+            if tm:
+                mult = int(tm.group(1))
+            elif " while(" in stripped or stripped.startswith("while("):
+                mult = 1  # unknown trip count -> counted once (flagged)
+            for callee in re.split(r"[,\s]+", cm.group(1)):
+                callee = callee.strip().lstrip("%")
+                if callee:
+                    res.calls.setdefault(cur, []).append((callee, mult))
+    return res
+
+
+@dataclass
+class RooflineReport:
+    """All inputs are PER-DEVICE quantities.
+
+    ``compiled.cost_analysis()`` on an SPMD program reports the per-device
+    share of FLOPs/bytes (verified empirically: an 8-way-sharded matmul
+    reports 1/8 of the global FLOPs), and the parsed HLO collective bytes
+    are the per-device program's transfer sizes.  ``model_flops`` should
+    therefore be passed as global_model_flops / chips.
+    """
+    name: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    model_flops: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name, "chips": self.chips,
+            "hlo_flops": self.flops, "hlo_bytes": self.bytes_accessed,
+            "collective_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_terms(name: str, compiled, *, chips: int,
+                   model_flops: float = 0.0,
+                   hlo_text: str = None) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return RooflineReport(name, chips, flops, byts, coll.total_bytes(),
+                          model_flops)
+
+
+def model_flops_estimate(cfg, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D for train, 2*N_active*D for inference."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,110 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def render(path: str, mesh: str = "single") -> str:
+    data = json.load(open(path))
+    rows = []
+    for key, v in sorted(data.items()):
+        arch, shape, mk = key.split("|")
+        if mk != mesh:
+            continue
+        if v.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | FAILED: "
+                        f"{v.get('error', '?')[:60]} | | | | | |")
+            continue
+        dom = v["dominant"]
+        rows.append(
+            "| {arch} | {shape} | {c} | {m} | {coll} | **{dom}** | "
+            "{ratio:.2f} | {peak:.1f} |".format(
+                arch=arch, shape=shape,
+                c=fmt_s(v["compute_s"]), m=fmt_s(v["memory_s"]),
+                coll=fmt_s(v["collective_s"]), dom=dom,
+                ratio=v.get("useful_flops_ratio", 0.0),
+                peak=v.get("peak_bytes", 0) / 2 ** 30))
+    header = (
+        f"**mesh: {mesh}** (terms are per-device seconds; v5e constants)\n\n"
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful-FLOPs | peak GiB/dev |\n"
+        "|---|---|---|---|---|---|---|---|\n")
+    return header + "\n".join(rows) + "\n"
+
+
+LEVERS = {
+    ("memory", "train"): "flash-attention kernel (removes S^2 score traffic)"
+                         " / remat policy",
+    ("memory", "prefill"): "flash-attention kernel; bf16 end-to-end",
+    ("memory", "decode"): "KV-cache sequence-sharding over idle mesh axes "
+                          "(H2 iter-2); int8 cache",
+    ("collective", "train"): "drop embed-dim FSDP below ~1e11 params "
+                             "(H1); overlap grad all-reduce with backward",
+    ("collective", "prefill"): "reduce-scatter matmul outputs instead of "
+                               "all-reduce; 2D weight layout",
+    ("collective", "decode"): "token-replicated expert-parallel MoE "
+                              "(H2 iter-1); avoid weight regathers",
+    ("compute", "train"): "already compute-bound: MFU via larger per-core "
+                          "batch / MXU-aligned dims",
+    ("compute", "prefill"): "already compute-bound (healthy)",
+    ("compute", "decode"): "batch more requests per step",
+}
+
+
+def notes(path: str, mesh: str = "single") -> str:
+    from repro.config import SHAPES
+    data = json.load(open(path))
+    out = []
+    for key, v in sorted(data.items()):
+        arch, shape, mk = key.split("|")
+        if mk != mesh or v.get("status") != "ok":
+            continue
+        kind = SHAPES[shape].kind
+        lever = LEVERS.get((v["dominant"], kind), "")
+        acc = " [ssm two-point accounting]" \
+            if v.get("accounting") else ""
+        out.append(
+            f"* **{arch} / {shape}** — dominant **{v['dominant']}** "
+            f"({fmt_s(max(v['compute_s'], v['memory_s'], v['collective_s']))}"
+            f"); useful-FLOPs {v.get('useful_flops_ratio', 0):.2f}{acc}. "
+            f"Lever: {lever}.")
+    return "\n".join(out) + "\n"
+
+
+def fill_experiments(path="results/dryrun.json",
+                     md_path="EXPERIMENTS.md") -> None:
+    md = open(md_path).read()
+    table = render(path, "single") + "\n" + render(path, "multi")
+    md = md.replace("<!-- DRYRUN_TABLE -->", table, 1)
+    md = md.replace("<!-- ROOFLINE_TABLE -->",
+                    "### Per-pair bottleneck notes (single-pod)\n\n"
+                    + notes(path, "single"), 1)
+    open(md_path, "w").write(md)
+    print(f"wrote tables into {md_path}")
+
+
+def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--fill":
+        fill_experiments(*(sys.argv[2:] or []))
+        return
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    for mesh in ("single", "multi"):
+        print(render(path, mesh))
+
+
+if __name__ == "__main__":
+    main()

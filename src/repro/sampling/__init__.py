@@ -1,0 +1,2 @@
+from repro.sampling.sampler import (  # noqa: F401
+    sample_token, sample_steps, score_and_append, StepBatch)

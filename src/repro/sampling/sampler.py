@@ -1,0 +1,141 @@
+"""Token sampling + reasoning-step generation / scoring.
+
+A *reasoning step* ends at the sep token ("\\n\\n" in the paper) or EOS.
+``sample_steps`` autoregressively samples one step per request (scratch
+cache — the engine discards it); ``score_and_append`` teacher-forces given
+step tokens through a model, returning their total log-probability and the
+cache extended by exactly those tokens (scoring and cache-append are the
+same pass — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PAD = 0
+
+
+class StepBatch(NamedTuple):
+    tokens: jnp.ndarray      # (B, L) sampled step tokens (PAD after end)
+    length: jnp.ndarray      # (B,) tokens in the step (incl. sep/eos)
+    logprob: jnp.ndarray     # (B,) sum log pi(token) over the step
+    ended: jnp.ndarray       # (B,) step terminated naturally (sep or eos)
+    eos: jnp.ndarray         # (B,) step terminated with EOS
+    cache: object            # scratch cache after the step (usually discarded)
+    positions: jnp.ndarray   # (B,) position after the step
+
+
+def top_p_filter(logits, top_p: float):
+    """Nucleus filtering: mask tokens outside the smallest top-p set.
+
+    Implemented via a cutoff value (keep every token whose logit >= the
+    boundary token's logit) so ties at the boundary are all kept — this
+    keeps the filter deterministic and always retains the argmax.
+    """
+    if top_p >= 1.0:
+        return logits
+    sort = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sort, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens while cumulative prob (exclusive) < top_p
+    keep_sorted = cum - probs < top_p
+    cutoff = jnp.min(jnp.where(keep_sorted, sort, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits >= cutoff, logits, -1e30)
+
+
+def sample_token(rng, logits, temperature: float = 1.0, top_p: float = 1.0):
+    """logits: (B,V) -> tokens (B,). Greedy when temperature == 0."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    scaled = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    scaled = top_p_filter(scaled, top_p)
+    return jax.random.categorical(rng, scaled, axis=-1)
+
+
+def sample_steps(model, params, cache, last_token, positions, rng, *,
+                 max_tokens: int, sep_token: int, eos_token: int,
+                 temperature: float = 0.7, top_p: float = 1.0,
+                 already_done=None) -> StepBatch:
+    """Sample one reasoning step per request.
+
+    last_token/positions: (B,) — the last committed token and its position.
+    Returns the sampled step and the scratch cache positioned after it.
+    The returned ``logprob`` is the *model* log-likelihood of the sampled
+    tokens (temperature affects sampling only), matching the paper's use of
+    raw log-probabilities in the tilted reward.
+    """
+    B = last_token.shape[0]
+    done0 = jnp.zeros((B,), bool) if already_done is None else already_done
+
+    def body(carry, rng_t):
+        cache, tok, pos, done, lp = carry
+        logits, cache = model.decode_step(params, cache, tok[:, None], pos,
+                                          live=~done)
+        nxt = sample_token(rng_t, logits, temperature, top_p)
+        logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        logp_tok = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+        nxt = jnp.where(done, PAD, nxt)
+        lp = lp + jnp.where(done, 0.0, logp_tok)
+        ended_now = (nxt == sep_token) | (nxt == eos_token)
+        new_done = done | ended_now
+        new_pos = jnp.where(done, pos, pos + 1)
+        return (cache, nxt, new_pos, new_done, lp), (nxt, new_done)
+
+    rngs = jax.random.split(rng, max_tokens)
+    (cache, _, pos, done, lp), (toks, dones) = jax.lax.scan(
+        body, (cache, last_token, positions, done0,
+               jnp.zeros((B,), jnp.float32)), rngs)
+    toks = jnp.moveaxis(toks, 0, 1)        # (B, L)
+    dones = jnp.moveaxis(dones, 0, 1)
+    length = jnp.sum(toks != PAD, axis=1)
+    ended = done
+    eos = jnp.any(toks == eos_token, axis=1)
+    return StepBatch(toks, length, lp, ended, eos, cache, pos)
+
+
+def score_and_append(model, params, cache, last_token, positions,
+                     step_tokens, *, return_rewards: bool = False):
+    """Teacher-force ``step_tokens`` (B,L; PAD-padded) through the model.
+
+    Returns (logprob (B,), new_cache, new_positions[, rewards (B,)]).
+    ``rewards`` (PRM models) is the reward head evaluated at the *last* real
+    token of each step.  The cache is advanced by exactly the real tokens.
+    """
+    B, L = step_tokens.shape
+
+    def body(carry, xs):
+        cache, tok, pos, lp, rw, fed_live = carry
+        target = xs                                     # (B,) token to score
+        live = target != PAD
+        out = model.decode_step(params, cache, tok[:, None], pos, live=live,
+                                return_hidden=return_rewards)
+        if return_rewards:
+            logits, cache, hidden = out
+            # reward head evaluated on the token *fed* this iteration;
+            # fed_live marks whether it was a real (non-frozen) step token.
+            r_here = model.reward_from_hidden(params, hidden)
+            rw = jnp.where(fed_live, r_here, rw)
+        else:
+            logits, cache = out
+        logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        lp_tok = jnp.take_along_axis(
+            logp_all, jnp.maximum(target, 0)[:, None], axis=-1)[:, 0]
+        lp = lp + jnp.where(live, lp_tok, 0.0)
+        pos = jnp.where(live, pos + 1, pos)
+        tok = jnp.where(live, target, tok)
+        return (cache, tok, pos, lp, rw, live), None
+
+    zeros = jnp.zeros((B,), jnp.float32)
+    # one extra PAD iteration so the reward of the final token is captured
+    xs = jnp.concatenate([step_tokens, jnp.zeros((B, 1), step_tokens.dtype)],
+                         axis=1)
+    (cache, _, pos, lp, rw, _), _ = jax.lax.scan(
+        body, (cache, last_token, positions, zeros, zeros,
+               jnp.ones((B,), bool)),
+        jnp.moveaxis(xs, 0, 1))
+    if return_rewards:
+        return lp, cache, pos, rw
+    return lp, cache, pos

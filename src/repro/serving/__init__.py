@@ -1,0 +1,3 @@
+from repro.serving.engine import repeat_cache, take_candidates  # noqa: F401
+from repro.serving.gsi_engine import GSIServingEngine, EngineStats  # noqa: F401
+from repro.serving.latency import LatencyModel, HW_V5E  # noqa: F401

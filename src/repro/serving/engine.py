@@ -1,0 +1,45 @@
+"""Serving-engine primitives: cache batch expansion, candidate selection.
+
+The GSI engine needs n scratch copies of a committed cache (one per draft
+candidate).  Caches store the batch dim at position 0 (unstacked ``rem``
+entries) or 1 (scan-stacked ``blocks`` entries); ``repeat_cache`` handles
+both via path inspection, producing (B*n, ...) scratch caches laid out so
+that row b*n+j is candidate j of request b.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _batch_dim(path, stacked_key: str = "blocks") -> int:
+    return 1 if any(getattr(p, "key", None) == stacked_key for p in path) \
+        else 0
+
+
+def repeat_cache(cache, n: int, stacked_key: str = "blocks"):
+    """Expand the batch dim B -> B*n (candidate-major rows)."""
+    def rep(path, leaf):
+        d = _batch_dim(path, stacked_key)
+        return jnp.repeat(leaf, n, axis=d)
+    return jax.tree_util.tree_map_with_path(rep, cache)
+
+
+def expand_requests(x, n: int):
+    """(B, ...) -> (B*n, ...) by repeating each request n times."""
+    return jnp.repeat(x, n, axis=0)
+
+
+def fold_candidates(x, n: int):
+    """(B*n, ...) -> (B, n, ...)."""
+    return x.reshape((x.shape[0] // n, n) + x.shape[1:])
+
+
+def take_candidates(cands, idx):
+    """cands: (B, n, L); idx: (B,) -> (B, L)."""
+    return jnp.take_along_axis(cands, idx[:, None, None], axis=1)[:, 0]
+
+
+def take_per_request(x, idx):
+    """x: (B, n); idx: (B,) -> (B,)."""
+    return jnp.take_along_axis(x, idx[:, None], axis=1)[:, 0]

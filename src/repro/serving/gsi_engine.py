@@ -1,0 +1,291 @@
+"""The GSI three-model serving engine (Algorithm 1, end to end).
+
+Co-locates draft pi_S, target pi_B and the PRM on one mesh and runs the
+step-level loop:
+
+  draft phase   — n scratch copies of the committed draft cache; sample n
+                  candidate steps; score them under pi_B (one parallel pass,
+                  ``score_and_append`` on a scratch target cache) and under
+                  the PRM; tilted-S-BoN select + threshold (core.gsi).
+  target phase  — on rejection: n candidate steps sampled from pi_B, PRM
+                  rewards, raw-reward S-BoN (lines 9-12).
+  commit        — append the chosen step to all three committed caches.
+
+The same engine, re-parameterized, implements every baseline of the paper:
+RSD (raw rewards + threshold), S-BoN(draft), S-BoN(base), and the
+"GSI w/o rejection" ablation.  Host-side loop + jitted phases; per-request
+divergence handled with live-masking (PAD) rather than re-batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import GSIConfig, ModelConfig
+from repro.core import gsi_select, rsd_select, soft_bon_select
+from repro.models import build_model
+from repro.sampling import sample_steps, score_and_append
+from repro.serving.engine import (expand_requests, fold_candidates,
+                                  repeat_cache, take_candidates,
+                                  take_per_request)
+
+PAD = 0
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    accepted: int = 0
+    decisions: int = 0
+    draft_tokens: int = 0
+    target_tokens: int = 0
+    requests_finished: int = 0
+    tilted_rewards: list = field(default_factory=list)
+    raw_rewards: list = field(default_factory=list)
+    logp_ratio: list = field(default_factory=list)   # log pi_B - log pi_S
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / max(1, self.decisions)
+
+
+class GSIServingEngine:
+    """mode: gsi | gsi_norej | rsd | sbon_s | sbon_b."""
+
+    def __init__(self, draft_cfg: ModelConfig, target_cfg: ModelConfig,
+                 prm_cfg: ModelConfig, params_s, params_b, params_p,
+                 gcfg: GSIConfig, *, mode: str = "gsi",
+                 rsd_threshold: float = 0.7, max_seq: int = 512,
+                 shared_scoring: bool = False):
+        assert prm_cfg.reward_head
+        self.mode = mode
+        self.gcfg = gcfg
+        self.rsd_threshold = rsd_threshold
+        self.max_seq = max_seq
+        # beyond-paper: score candidates against ONE shared cache instead of
+        # n scratch copies (models/scoring.py); identical math, far less HBM.
+        self.shared_scoring = shared_scoring
+        self.draft = build_model(draft_cfg)
+        self.target = build_model(target_cfg)
+        self.prm = build_model(prm_cfg)
+        self.params = (params_s, params_b, params_p)
+        self._jit_draft_phase = jax.jit(self._draft_phase)
+        self._jit_target_phase = jax.jit(self._target_phase)
+        self._jit_commit = jax.jit(self._commit)
+
+    # ------------------------------------------------------------------
+    # State
+    # ------------------------------------------------------------------
+    def init_state(self, prompts: np.ndarray):
+        """prompts: (B, Lp) PAD-padded token array."""
+        B = prompts.shape[0]
+        caches = {
+            "S": self.draft.init_cache(B, self.max_seq),
+            "B": self.target.init_cache(B, self.max_seq),
+            "P": self.prm.init_cache(B, self.max_seq),
+        }
+        state = {
+            "caches": caches,
+            "pending": jnp.asarray(prompts[:, 0], jnp.int32),
+            "pos": jnp.zeros((B,), jnp.int32),
+            "done": jnp.zeros((B,), bool),
+        }
+        if prompts.shape[1] > 1:
+            state = self._jit_commit(state, jnp.asarray(prompts[:, 1:],
+                                                        jnp.int32))
+        return state
+
+    # ------------------------------------------------------------------
+    # Jitted phases
+    # ------------------------------------------------------------------
+    def _commit(self, state, step_tokens):
+        """Append step_tokens (B,L) to the three committed caches."""
+        ps, pb, pp = self.params
+        caches = state["caches"]
+        new = {}
+        _, new["S"], pos = score_and_append(
+            self.draft, ps, caches["S"], state["pending"], state["pos"],
+            step_tokens)
+        _, new["B"], _ = score_and_append(
+            self.target, pb, caches["B"], state["pending"], state["pos"],
+            step_tokens)
+        _, new["P"], _, _ = score_and_append(
+            self.prm, pp, caches["P"], state["pending"], state["pos"],
+            step_tokens, return_rewards=True)
+        length = jnp.sum(step_tokens != PAD, axis=1)
+        pending = jnp.where(
+            length > 0,
+            jnp.take_along_axis(
+                step_tokens, jnp.maximum(length - 1, 0)[:, None],
+                axis=1)[:, 0],
+            state["pending"])
+        return {"caches": new, "pending": pending, "pos": pos,
+                "done": state["done"]}
+
+    def _draft_phase(self, state, rng):
+        """Sample n draft candidates; score with target + PRM."""
+        g = self.gcfg
+        n = g.n
+        ps, pb, pp = self.params
+        k1, k2 = jax.random.split(rng)
+        pend = expand_requests(state["pending"], n)
+        pos = expand_requests(state["pos"], n)
+        done = expand_requests(state["done"], n)
+
+        scratch_s = repeat_cache(state["caches"]["S"], n)
+        steps = sample_steps(
+            self.draft, ps, scratch_s, pend, pos, k1,
+            max_tokens=g.max_step_tokens, sep_token=g.sep_token_id,
+            eos_token=g.eos_token_id, temperature=g.temperature,
+            top_p=g.top_p, already_done=done)
+
+        cands = fold_candidates(steps.tokens, n)             # (B,n,L)
+        # PRM rewards (always needed)
+        if self.shared_scoring:
+            from repro.models.scoring import score_candidates
+            _, rewards = score_candidates(
+                self.prm, pp, state["caches"]["P"], state["pending"],
+                state["pos"], cands, return_rewards=True)
+        else:
+            scratch_p = repeat_cache(state["caches"]["P"], n)
+            _, _, _, rewards_flat = score_and_append(
+                self.prm, pp, scratch_p, pend, pos, steps.tokens,
+                return_rewards=True)
+            rewards = fold_candidates(rewards_flat, n)
+
+        out = {
+            "cands": cands,
+            "logp_S": fold_candidates(steps.logprob, n),     # (B,n)
+            "rewards": rewards,
+            "rng": k2,
+        }
+        if self.mode in ("gsi", "gsi_norej"):
+            if self.shared_scoring:
+                from repro.models.scoring import score_candidates
+                out["logp_B"] = score_candidates(
+                    self.target, pb, state["caches"]["B"],
+                    state["pending"], state["pos"], cands)
+            else:
+                scratch_b = repeat_cache(state["caches"]["B"], n)
+                logp_B, _, _ = score_and_append(
+                    self.target, pb, scratch_b, pend, pos, steps.tokens)
+                out["logp_B"] = fold_candidates(logp_B, n)
+            dec = gsi_select(k2, out["rewards"], out["logp_B"],
+                             out["logp_S"], beta=g.beta,
+                             threshold_u=g.threshold_u)
+            accept = dec.accept if (self.mode == "gsi" and g.use_rejection) \
+                else jnp.ones_like(dec.accept)
+            out.update(index=dec.index, accept=accept,
+                       selected=dec.selected_tilted, tilted=dec.tilted)
+        elif self.mode == "rsd":
+            dec = rsd_select(k2, out["rewards"], beta=g.beta,
+                             threshold=self.rsd_threshold)
+            out.update(index=dec.index, accept=dec.accept,
+                       selected=dec.selected_reward, tilted=out["rewards"])
+        else:  # sbon_s: always accept the soft-BoN choice
+            idx = soft_bon_select(k2, out["rewards"], g.beta)
+            out.update(index=idx, accept=jnp.ones((idx.shape[0],), bool),
+                       selected=take_per_request(out["rewards"], idx),
+                       tilted=out["rewards"])
+        out["chosen"] = take_candidates(out["cands"], out["index"])
+        out["max_reward"] = jnp.max(out["rewards"], axis=-1)
+        return out
+
+    def _target_phase(self, state, rng):
+        """S-BoN with the target model (rejection fallback / sbon_b)."""
+        g = self.gcfg
+        n = g.n_target or g.n
+        _, pb, pp = self.params
+        k1, k2 = jax.random.split(rng)
+        pend = expand_requests(state["pending"], n)
+        pos = expand_requests(state["pos"], n)
+        done = expand_requests(state["done"], n)
+
+        scratch_b = repeat_cache(state["caches"]["B"], n)
+        steps = sample_steps(
+            self.target, pb, scratch_b, pend, pos, k1,
+            max_tokens=g.max_step_tokens, sep_token=g.sep_token_id,
+            eos_token=g.eos_token_id, temperature=g.temperature,
+            top_p=g.top_p, already_done=done)
+        scratch_p = repeat_cache(state["caches"]["P"], n)
+        _, _, _, rewards = score_and_append(
+            self.prm, pp, scratch_p, pend, pos, steps.tokens,
+            return_rewards=True)
+        cands = fold_candidates(steps.tokens, n)
+        r = fold_candidates(rewards, n)
+        idx = soft_bon_select(k2, r, g.beta)
+        return {"chosen": take_candidates(cands, idx),
+                "rewards": r, "selected": take_per_request(r, idx)}
+
+    # ------------------------------------------------------------------
+    # Host loop
+    # ------------------------------------------------------------------
+    def run(self, prompts: np.ndarray, rng, *,
+            collect_stats: bool = True):
+        """Generate until EOS/max_steps.  Returns (responses, stats).
+
+        responses: list of B lists of step-token arrays.
+        """
+        g = self.gcfg
+        B = prompts.shape[0]
+        state = self.init_state(prompts)
+        stats = EngineStats()
+        responses = [[] for _ in range(B)]
+
+        for it in range(g.max_steps):
+            rng, k1, k2 = jax.random.split(rng, 3)
+            if self.mode == "sbon_b":
+                tp = self._jit_target_phase(state, k1)
+                chosen = tp["chosen"]
+                accept = np.ones((B,), bool)
+                sel = np.asarray(tp["selected"])
+                max_r = np.asarray(jnp.max(tp["rewards"], -1))
+                stats.target_tokens += int(
+                    np.sum(np.asarray(chosen) != PAD)) * g.n
+            else:
+                dp = self._jit_draft_phase(state, k1)
+                accept = np.asarray(dp["accept"])
+                chosen = dp["chosen"]
+                sel = np.asarray(dp["selected"])
+                max_r = np.asarray(dp["max_reward"])
+                stats.draft_tokens += int(
+                    np.sum(np.asarray(dp["cands"]) != PAD))
+                if collect_stats:
+                    stats.raw_rewards.append(np.asarray(dp["rewards"]))
+                    if "logp_B" in dp:
+                        stats.logp_ratio.append(
+                            np.asarray(dp["logp_B"] - dp["logp_S"]))
+                        stats.tilted_rewards.append(np.asarray(dp["tilted"]))
+                if not accept.all():
+                    tp = self._jit_target_phase(state, k2)
+                    chosen = jnp.where(jnp.asarray(accept)[:, None],
+                                       chosen, tp["chosen"])
+                    stats.target_tokens += int(
+                        np.sum(np.asarray(tp["chosen"]) != PAD)) * g.n
+                live = ~np.asarray(state["done"])
+                stats.decisions += int(live.sum())
+                stats.accepted += int((accept & live).sum())
+
+            # early stop (paper B.2): all draft rewards below min threshold
+            failed = max_r < self.gcfg.min_step_reward
+            chosen_np = np.asarray(chosen)
+            done_prev = np.asarray(state["done"])
+            for b in range(B):
+                if not done_prev[b]:
+                    toks = chosen_np[b][chosen_np[b] != PAD]
+                    responses[b].append(toks)
+            state = self._jit_commit(state, chosen)
+            eos = np.asarray(
+                jnp.any(chosen == self.gcfg.eos_token_id, axis=1))
+            new_done = done_prev | eos | (failed & ~done_prev)
+            state["done"] = jnp.asarray(new_done)
+            stats.steps += 1
+            if new_done.all():
+                break
+        stats.requests_finished = int(np.asarray(state["done"]).sum())
+        return responses, stats

@@ -1,0 +1,84 @@
+"""Analytic latency model (roofline-based) for the paper's Table 1 / Fig. 4.
+
+This container is CPU-only, so end-to-end seconds are reconstructed from the
+same three-term roofline used in EXPERIMENTS §Roofline: per phase,
+time = max(compute, memory) with
+
+  decode   (per token)  — memory-bound: bytes = params + KV-cache read
+  scoring  (per step)   — one parallel forward: compute-bound at n*L tokens
+  PRM      (per step)   — ditto
+
+fed with acceptance rates and step lengths *measured* from the engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops: float          # peak bf16 FLOP/s per chip
+    hbm_bw: float         # bytes/s per chip
+    chips: int = 1
+
+
+HW_V5E = Hardware("tpu-v5e", 197e12, 819e9)
+
+
+@dataclass
+class ModelCost:
+    params: int           # active params per token
+    kv_bytes_per_tok: int
+
+    def decode_time(self, hw: Hardware, ctx_len: int, batch: int) -> float:
+        """One decode step for `batch` rows (memory-bound path)."""
+        weight_bytes = 2 * self.params  # bf16
+        cache_bytes = batch * self.kv_bytes_per_tok * ctx_len
+        mem = (weight_bytes + cache_bytes) / (hw.hbm_bw * hw.chips)
+        comp = batch * 2 * self.params / (hw.flops * hw.chips)
+        return max(mem, comp)
+
+    def forward_time(self, hw: Hardware, tokens: int) -> float:
+        """Parallel scoring/prefill over `tokens` tokens (compute path)."""
+        comp = tokens * 2 * self.params / (hw.flops * hw.chips)
+        mem = 2 * self.params / (hw.hbm_bw * hw.chips)
+        return max(mem, comp)
+
+
+class LatencyModel:
+    def __init__(self, draft: ModelCost, target: ModelCost, prm: ModelCost,
+                 hw: Hardware = HW_V5E):
+        self.draft, self.target, self.prm, self.hw = draft, target, prm, hw
+
+    def step_time(self, *, method: str, n: int, step_len: float,
+                  ctx_len: float, accept_rate: float = 1.0) -> float:
+        """Seconds per reasoning step for one request (batch of n samples)."""
+        hw = self.hw
+        draft_gen = step_len * self.draft.decode_time(hw, ctx_len, n)
+        target_gen = step_len * self.target.decode_time(hw, ctx_len, n)
+        score_b = self.target.forward_time(hw, n * step_len)
+        prm_t = self.prm.forward_time(hw, n * step_len)
+
+        if method == "sbon_s":
+            return draft_gen + prm_t
+        if method == "sbon_b":
+            return target_gen + prm_t
+        if method == "rsd":
+            return draft_gen + prm_t + (1 - accept_rate) * (target_gen + prm_t)
+        if method in ("gsi", "gsi_norej"):
+            t = draft_gen + prm_t + score_b
+            if method == "gsi":
+                t += (1 - accept_rate) * (target_gen + prm_t)
+            return t
+        raise ValueError(method)
+
+    def sample_time(self, *, method: str, n: int, steps: float,
+                    step_len: float, accept_rate: float = 1.0) -> float:
+        """End-to-end seconds per sample (ctx grows step by step)."""
+        total = 0.0
+        for s in range(int(round(steps))):
+            ctx = (s + 0.5) * step_len
+            total += self.step_time(method=method, n=n, step_len=step_len,
+                                    ctx_len=ctx, accept_rate=accept_rate)
+        return total

@@ -1,0 +1,2 @@
+from repro.train.trainer import (  # noqa: F401
+    make_train_step, make_prm_train_step, lm_loss, prm_loss, Trainer)

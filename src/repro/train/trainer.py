@@ -1,0 +1,105 @@
+"""Training loop: LM cross-entropy and PRM regression train steps.
+
+``make_train_step`` returns a pure jittable (params, opt_state, batch) ->
+(params, opt_state, metrics) function — the object that launch/dryrun.py
+lowers with pjit shardings for the production meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import build_model
+from repro.models.common import padded_vocab
+from repro.optim import AdamW
+
+
+def lm_loss(model, params, batch, *, source=None):
+    """Next-token CE over loss_mask positions (+ MoE aux)."""
+    tokens = batch["tokens"]
+    mask = batch["loss_mask"][:, :-1]
+    logits, aux = model.forward(params, tokens[:, :-1], source=source)
+    labels = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - picked
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + model.cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+def prm_loss(model, params, batch):
+    """BCE of the reward head vs golden process rewards at step ends."""
+    tokens = batch["tokens"]
+    r = model.reward(params, tokens)                   # (B,S)
+    y = batch["reward_labels"]
+    m = batch["reward_mask"]
+    eps = 1e-6
+    bce = -(y * jnp.log(r + eps) + (1 - y) * jnp.log(1 - r + eps))
+    loss = jnp.sum(bce * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss, {"loss": loss, "aux_loss": jnp.zeros(()),
+                  "tokens": jnp.sum(m)}
+
+
+def _make_step(model, tcfg: TrainConfig, loss_fn) -> Callable:
+    opt = AdamW(tcfg)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, batch), has_aux=True)(params)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    with_source: bool = False) -> Callable:
+    model = build_model(cfg)
+    if with_source:
+        def loss(model, p, batch):
+            return lm_loss(model, p,
+                           {k: batch[k] for k in ("tokens", "loss_mask")},
+                           source=batch["source"])
+        return _make_step(model, tcfg, loss)
+    return _make_step(model, tcfg, lm_loss)
+
+
+def make_prm_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    model = build_model(cfg)
+    return _make_step(model, tcfg, prm_loss)
+
+
+class Trainer:
+    """Host-side convenience loop (single-process; used by examples/tests)."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *, prm=False):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.model = build_model(cfg)
+        self.opt = AdamW(tcfg)
+        self.params = self.model.init(jax.random.PRNGKey(tcfg.seed))
+        self.opt_state = self.opt.init(self.params)
+        step = (make_prm_train_step if prm else make_train_step)(cfg, tcfg)
+        self._step = jax.jit(step, donate_argnums=(0, 1))
+        self.history = []
+
+    def fit(self, batches, steps: int, log_every: int = 50):
+        import numpy as np
+        for i, batch in enumerate(batches):
+            if i >= steps:
+                break
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, m = self._step(
+                self.params, self.opt_state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                self.history.append(
+                    {"step": i, "loss": float(m["loss"]),
+                     "grad_norm": float(m["grad_norm"])})
+        return self.history

@@ -1,0 +1,32 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.config import ModelConfig
+
+# NOTE: never set xla_force_host_platform_device_count here — smoke tests
+# and benchmarks must see the single real CPU device (dry-runs spawn their
+# own process with 512 placeholder devices).
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return ModelConfig(
+        name="t-dense", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64, head_dim=16,
+        dtype="float32", param_dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def tiny_triple(tiny_dense):
+    draft = tiny_dense
+    target = dataclasses.replace(draft, name="t-target", num_layers=3,
+                                 d_model=96, head_dim=24)
+    prm = dataclasses.replace(target, name="t-prm", reward_head=True)
+    return draft, target, prm
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,106 @@
+"""Core GSI math: tilting identity, selection, theorem validation, RSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ToyEnv, gsi_select, rsd_select, soft_bon_select,
+                        theory, tilted_policy, tilted_rewards)
+from repro.core.tilting import log_partition
+
+
+def test_tilting_identity():
+    """pi_S tilted by r~  ==  pi_B tilted by r (the §4 rewrite)."""
+    env = ToyEnv(m=10, seed=1)
+    beta = 2.0
+    logp_b = jnp.log(env.pi_B)
+    logp_s = jnp.log(env.pi_S)
+    r_t = tilted_rewards(env.r, logp_b, logp_s, beta)
+    lhs = jax.nn.softmax(jnp.log(env.pi_S) + beta * r_t)
+    rhs = tilted_policy(env.pi_B, env.r, beta)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-6)
+
+
+def test_log_partition_monotone_in_beta():
+    env = ToyEnv(m=8, seed=2)
+    zs = [float(log_partition(env.pi_B, env.r, b)) for b in (0.5, 1, 2, 4)]
+    assert all(b > a for a, b in zip(zs, zs[1:]))
+    assert float(log_partition(env.pi_B, env.r, 1e-9)) == pytest.approx(
+        0.0, abs=1e-6)
+
+
+def test_gsi_select_acceptance_threshold():
+    rng = jax.random.PRNGKey(0)
+    rewards = jnp.array([[0.9, 0.1], [0.05, 0.02]])
+    logp = jnp.zeros((2, 2))
+    dec = gsi_select(rng, rewards, logp, logp, beta=50.0, threshold_u=0.5)
+    assert bool(dec.accept[0]) is True       # selects ~0.9 >= 0.5
+    assert bool(dec.accept[1]) is False
+    np.testing.assert_allclose(dec.tilted, rewards, atol=1e-6)
+
+
+def test_theorem1_kl_bound_holds_on_toy():
+    env = ToyEnv(m=12, seed=0)
+    beta = 1.0
+    tilted = env.tilted(beta)
+    chi2 = float(env.chi2)
+    r_max = float(env.r.max())
+    prev_kl = None
+    for n in [1, 4, 16]:
+        trials = 120_000
+        tr = env.run_gsi(jax.random.PRNGKey(n), n=n, beta=beta, u=0.5,
+                         trials=trials)
+        emp = env.histogram(tr.outcomes_tilde)
+        kl = float(theory.kl_mc_estimate(tilted, emp * trials))
+        bound = float(theory.theorem1_kl_bound(n, chi2, beta, r_max))
+        assert kl <= bound + 1e-3, (n, kl, bound)
+        if prev_kl is not None:
+            assert kl <= prev_kl + 5e-3   # improves with n
+        prev_kl = kl
+
+
+def test_theorem1_n_bound_inverts_kl_bound():
+    chi2, beta, r_max, eps = 2.0, 1.0, 1.0, 0.1
+    n = float(theory.theorem1_n_bound(chi2, beta, r_max, eps))
+    # at that n the KL bound equals eps
+    kl = float(theory.theorem1_kl_bound(n, chi2, beta, r_max))
+    assert kl == pytest.approx(eps, rel=1e-4)
+    # the paper's worked example: chi2=2, beta=1, eps=0.1 -> n ~ 201
+    assert 195 <= n <= 210
+
+
+def test_theorem2_gap_bound_holds_on_toy():
+    env = ToyEnv(m=12, seed=3)
+    beta = 1.0
+    tilted = env.tilted(beta)
+    for n in [4, 16]:
+        tr = env.run_gsi(jax.random.PRNGKey(n), n=n, beta=beta, u=0.5,
+                         trials=120_000)
+        emp = env.histogram(tr.outcomes)
+        gap = float(env.expected_golden(tilted)
+                    - jnp.sum(emp * env.r_star))
+        bound = float(theory.theorem2_gap_bound(
+            n, float(tr.accept.mean()), float(env.chi2),
+            float(env.cv(beta)), beta, float(env.r.max()), 1.0))
+        assert gap <= bound + 5e-3
+
+
+def test_rsd_uses_raw_rewards():
+    rng = jax.random.PRNGKey(0)
+    rewards = jnp.array([[0.8, 0.2]])
+    dec = rsd_select(rng, rewards, beta=50.0, threshold=0.7)
+    assert bool(dec.accept[0])
+    dec2 = rsd_select(rng, rewards * 0.5, beta=50.0, threshold=0.7)
+    assert not bool(dec2.accept[0])
+
+
+def test_soft_bon_limits():
+    rng = jax.random.PRNGKey(0)
+    r = jnp.array([[0.1, 0.9, 0.5]])
+    # beta -> inf: argmax
+    idx = soft_bon_select(rng, jnp.repeat(r, 64, 0), beta=1e4)
+    assert (np.asarray(idx) == 1).all()
+    # beta = 0: ~uniform
+    idx0 = soft_bon_select(rng, jnp.repeat(r, 3000, 0), beta=0.0)
+    counts = np.bincount(np.asarray(idx0), minlength=3) / 3000
+    assert (np.abs(counts - 1 / 3) < 0.05).all()

@@ -1,0 +1,79 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.logprob_gather import logprob_gather_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+
+@pytest.mark.parametrize("B,S,d,V,vocab,dtype", [
+    (2, 8, 64, 512, 500, jnp.float32),
+    (1, 17, 128, 1024, 1024, jnp.float32),
+    (3, 5, 32, 768, 700, jnp.bfloat16),
+    (1, 1, 16, 256, 256, jnp.float32),
+])
+def test_logprob_gather(B, S, d, V, vocab, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(V + S), 3)
+    h = jax.random.normal(k1, (B, S, d), dtype)
+    w = (jax.random.normal(k2, (d, V), jnp.float32) * 0.05).astype(dtype)
+    lab = jax.random.randint(k3, (B, S), 0, vocab)
+    out = logprob_gather_pallas(h, w, lab, vocab, tt=8, vt=256,
+                                interpret=True)
+    want = ref.logprob_gather_ref(h, w, lab, vocab)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(out, want, atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,Sq,H,KV,hd,causal,window,dtype", [
+    (2, 32, 4, 2, 16, True, 0, jnp.float32),
+    (1, 40, 3, 1, 32, True, 16, jnp.float32),
+    (2, 24, 2, 2, 8, False, 0, jnp.float32),
+    (1, 33, 4, 4, 16, True, 0, jnp.bfloat16),
+])
+def test_flash_attention(B, Sq, H, KV, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(Sq + H), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sq, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sq, KV, hd), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 qt=16, kt=16, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", [
+    (2, 24, 3, 8, 8),
+    (1, 17, 2, 16, 8),   # ragged T vs chunk
+    (2, 32, 1, 4, 16),
+    (1, 8, 2, 8, 64),    # chunk > T
+])
+def test_rwkv6_scan(B, T, H, hd, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(T + hd), 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hd)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.3
+    s0 = jax.random.normal(ks[5], (B, H, hd, hd)) * 0.1
+    out, sT = rwkv6_scan_pallas(r, k, v, w, u, s0, chunk=chunk,
+                                interpret=True)
+    oref, sref = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(out, oref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(sT, sref, atol=1e-4, rtol=1e-4)
+
+
+def test_ops_dispatch_interpret(monkeypatch):
+    """REPRO_USE_PALLAS=interpret routes through the kernels."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    from repro.kernels import ops
+    h = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 256)) * 0.1
+    lab = jax.random.randint(jax.random.PRNGKey(2), (1, 4), 0, 256)
+    np.testing.assert_allclose(
+        ops.logprob_gather(h, w, lab, 256),
+        ref.logprob_gather_ref(h, w, lab, 256), atol=1e-4, rtol=1e-4)

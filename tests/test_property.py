@@ -1,0 +1,79 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import theory, tilted_policy, tilted_rewards
+from repro.sampling.sampler import top_p_filter
+
+FINITE = dict(allow_nan=False, allow_infinity=False)
+
+
+def probs(m):
+    return hnp.arrays(np.float64, (m,),
+                      elements=st.floats(0.01, 10.0, **FINITE)).map(
+        lambda a: a / a.sum())
+
+
+@settings(deadline=None, max_examples=30)
+@given(p=probs(8), q=probs(8))
+def test_divergences_nonnegative(p, q):
+    assert float(theory.kl_divergence(jnp.asarray(p), jnp.asarray(q))) >= -1e-6
+    assert float(theory.chi2_divergence(jnp.asarray(p),
+                                        jnp.asarray(q))) >= -1e-6
+    # KL(p||p) == 0
+    assert float(theory.kl_divergence(jnp.asarray(p),
+                                      jnp.asarray(p))) < 1e-6
+
+
+@settings(deadline=None, max_examples=30)
+@given(pi_b=probs(8), pi_s=probs(8),
+       r=hnp.arrays(np.float64, (8,), elements=st.floats(0, 1, **FINITE)),
+       beta=st.floats(0.1, 10.0))
+def test_tilting_rewrite_identity(pi_b, pi_s, r, beta):
+    """softmax(log pi_S + beta*r~) == tilted pi_B for ANY pi_S coverage."""
+    r_t = tilted_rewards(jnp.asarray(r), jnp.log(jnp.asarray(pi_b)),
+                         jnp.log(jnp.asarray(pi_s)), beta)
+    lhs = jax.nn.softmax(jnp.log(jnp.asarray(pi_s)) + beta * r_t)
+    rhs = tilted_policy(jnp.asarray(pi_b), jnp.asarray(r), beta)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=30)
+@given(pi_b=probs(8),
+       r=hnp.arrays(np.float64, (8,), elements=st.floats(0, 1, **FINITE)),
+       beta=st.floats(0.1, 5.0))
+def test_tilted_policy_increases_reward(pi_b, r, beta):
+    """E_{tilted}[r] >= E_{pi_B}[r] (exponential tilting is monotone)."""
+    t = tilted_policy(jnp.asarray(pi_b), jnp.asarray(r), beta)
+    assert float(jnp.sum(t * r)) >= float(jnp.sum(jnp.asarray(pi_b) * r)) \
+        - 1e-9
+
+
+@settings(deadline=None, max_examples=25)
+@given(logits=hnp.arrays(np.float32, (4, 16),
+                         elements=st.floats(-5, 5, **FINITE)),
+       top_p=st.floats(0.2, 0.99))
+def test_top_p_keeps_argmax_and_mass(logits, top_p):
+    out = top_p_filter(jnp.asarray(logits), top_p)
+    kept = np.asarray(out) > -1e29
+    # argmax always kept
+    am = np.argmax(logits, -1)
+    assert kept[np.arange(4), am].all()
+    # kept mass >= top_p
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    assert ((p * kept).sum(-1) >= min(top_p, 1.0) - 1e-4).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(1, 512), chi2=st.floats(0.0, 10.0),
+       beta=st.floats(0.01, 2.0))
+def test_theorem1_bound_monotone_decreasing_in_n(n, chi2, beta):
+    b1 = float(theory.theorem1_kl_bound(n, chi2, beta, 1.0))
+    b2 = float(theory.theorem1_kl_bound(n + 1, chi2, beta, 1.0))
+    assert b2 <= b1 + 1e-9
+    assert b1 >= -1e-6

@@ -1,0 +1,84 @@
+"""sample_steps / score_and_append invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model
+from repro.sampling import sample_steps, score_and_append
+from repro.sampling.sampler import PAD
+
+
+def test_sample_steps_stop_and_logprob(tiny_dense):
+    m = build_model(tiny_dense)
+    params = m.init(jax.random.PRNGKey(0))
+    B, sep, eos = 3, 1, 2
+    cache = m.init_cache(B, 64)
+    last = jnp.full((B,), 5, jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    steps = sample_steps(m, params, cache, last, pos, jax.random.PRNGKey(1),
+                         max_tokens=10, sep_token=sep, eos_token=eos,
+                         temperature=1.0)
+    toks = np.asarray(steps.tokens)
+    for b in range(B):
+        row = toks[b]
+        ends = np.isin(row, [sep, eos])
+        if ends.any():
+            e = int(np.argmax(ends))
+            assert (row[e + 1:] == PAD).all()      # nothing after step end
+            assert steps.length[b] == e + 1
+    assert steps.positions.shape == (B,)
+    assert np.all(np.asarray(steps.positions) == np.asarray(steps.length))
+    assert np.all(np.asarray(steps.logprob) <= 0.0)
+
+
+def test_score_and_append_matches_sampling_logprob(tiny_dense):
+    """Teacher-forcing the sampled step reproduces its sample logprob."""
+    m = build_model(tiny_dense)
+    params = m.init(jax.random.PRNGKey(0))
+    B = 2
+    last = jnp.full((B,), 5, jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    steps = sample_steps(m, params, m.init_cache(B, 64), last, pos,
+                         jax.random.PRNGKey(1), max_tokens=8, sep_token=1,
+                         eos_token=2, temperature=1.0)
+    lp, cache, pos2 = score_and_append(
+        m, params, m.init_cache(B, 64), last, pos, steps.tokens)
+    np.testing.assert_allclose(lp, steps.logprob, atol=1e-3, rtol=1e-3)
+    assert np.all(np.asarray(pos2) == np.asarray(steps.positions))
+
+
+def test_append_equals_prefill(tiny_dense):
+    """Cache built by score_and_append == cache built by prefill."""
+    m = build_model(tiny_dense)
+    params = m.init(jax.random.PRNGKey(0))
+    B, L = 2, 9
+    seq = jax.random.randint(jax.random.PRNGKey(1), (B, L), 3, 60)
+    _, cache_a, pos_a = score_and_append(
+        m, params, m.init_cache(B, 16), seq[:, 0], jnp.zeros((B,), jnp.int32),
+        seq[:, 1:])
+    # invariant: cache holds positions < L-1, pending = seq[:, -1]
+    _, cache_p = m.prefill(params, seq[:, :-1], max_seq=16)
+    for a, p in zip(jax.tree.leaves(cache_a), jax.tree.leaves(cache_p)):
+        np.testing.assert_allclose(np.asarray(a, np.float32)[..., :L - 1, :, :]
+                                   if a.ndim >= 4 else np.asarray(a),
+                                   np.asarray(p, np.float32)[..., :L - 1, :, :]
+                                   if p.ndim >= 4 else np.asarray(p),
+                                   atol=2e-4, rtol=2e-4)
+    # continuing decode from both caches gives identical logits
+    tok = seq[:, -1:]
+    posv = jnp.full((B,), L - 1, jnp.int32)
+    la, _ = m.decode_step(params, cache_a, tok, posv)
+    lp_, _ = m.decode_step(params, cache_p, tok, posv)
+    np.testing.assert_allclose(la, lp_, atol=2e-4, rtol=2e-4)
+
+
+def test_score_and_append_variable_lengths(tiny_dense):
+    """PAD rows freeze position and cache correctness for short steps."""
+    m = build_model(tiny_dense)
+    params = m.init(jax.random.PRNGKey(0))
+    steps = jnp.array([[7, 8, 9, 10], [7, 1, PAD, PAD]], jnp.int32)
+    last = jnp.full((2,), 5, jnp.int32)
+    lp, cache, pos = score_and_append(
+        m, params, m.init_cache(2, 16), last, jnp.zeros((2,), jnp.int32),
+        steps)
+    assert np.asarray(pos).tolist() == [4, 2]

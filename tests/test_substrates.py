@@ -1,0 +1,151 @@
+"""Data / optimizer / checkpoint / latency-model / spec-decode tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.config import TrainConfig
+from repro.core.spec_decode import speculative_verify
+from repro.data import EOS, PAD, SEP, SyntheticReasoningTask
+from repro.data.synthetic import D0, digits_to_tokens, tokens_to_int
+from repro.optim import AdamW, clip_by_global_norm, cosine_schedule
+from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
+
+
+# ---------------------------------------------------------------------------
+# synthetic task
+# ---------------------------------------------------------------------------
+
+def test_digits_roundtrip():
+    for x in [0, 7, 10, 123, 4096]:
+        assert tokens_to_int(digits_to_tokens(x)) == x
+
+
+def test_golden_reward_exact():
+    task = SyntheticReasoningTask(seed=0)
+    prob = task.sample_problem()
+    steps = task.solution_steps(prob)
+    flat = [t for s in steps for t in s]
+    assert task.golden_reward(prob, flat) == 1.0
+    assert task.is_correct(prob, flat)
+    # corrupt the first step -> reward 0
+    bad = list(flat)
+    bad[0] = D0 + (bad[0] - D0 + 1) % 10
+    assert task.golden_reward(prob, bad) == 0.0
+    # correct prefix of k steps -> k / num_steps
+    one = list(steps[0])
+    assert task.golden_reward(prob, one) == pytest.approx(
+        1.0 / prob.num_steps)
+
+
+def test_lm_and_prm_batches_wellformed():
+    task = SyntheticReasoningTask(seed=0)
+    b = task.lm_batch(4, 48)
+    assert b["tokens"].shape == (4, 48) and b["loss_mask"].shape == (4, 48)
+    assert (b["loss_mask"] <= 1).all()
+    pb = task.prm_batch(4, 48)
+    assert set(pb) == {"tokens", "reward_labels", "reward_mask"}
+    assert ((pb["reward_labels"] >= 0) & (pb["reward_labels"] <= 1)).all()
+    # reward labels are monotone non-increasing per sequence? (errors only
+    # break forward) — prefix reward never increases after breaking
+    for row_lab, row_mask in zip(pb["reward_labels"], pb["reward_mask"]):
+        vals = row_lab[row_mask > 0]
+        diffs = np.diff(vals)
+        # once broken, reward stays flat; otherwise grows by 1/num_steps
+        assert (diffs > -1e-6).all() or (vals[-1] <= vals.max())
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=1, total_steps=200,
+                       weight_decay=0.0)
+    opt = AdamW(tcfg)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 0.3
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.full((3,), 100.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(3 * 100.0 ** 2), rel=1e-5)
+    norm = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert norm == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=100)
+    lr = cosine_schedule(tcfg)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-6)
+    assert float(lr(55)) < float(lr(20))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, tiny_dense):
+    from repro.models import build_model
+    m = build_model(tiny_dense)
+    params = m.init(jax.random.PRNGKey(0))
+    # include a bf16 leaf
+    params["embed"]["embedding"] = params["embed"]["embedding"].astype(
+        jnp.bfloat16)
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, params)
+    restored = load_checkpoint(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# latency model
+# ---------------------------------------------------------------------------
+
+def test_latency_model_orderings():
+    lm = LatencyModel(ModelCost(1.5e9, 1024), ModelCost(7e9, 4096),
+                      ModelCost(7e9, 4096), HW_V5E)
+    kw = dict(n=4, step_len=20, ctx_len=512)
+    t_s = lm.step_time(method="sbon_s", **kw)
+    t_b = lm.step_time(method="sbon_b", **kw)
+    t_gsi_hi = lm.step_time(method="gsi", accept_rate=0.95, **kw)
+    t_gsi_lo = lm.step_time(method="gsi", accept_rate=0.2, **kw)
+    t_rsd = lm.step_time(method="rsd", accept_rate=0.95, **kw)
+    assert t_s < t_b                       # draft cheaper than target
+    assert t_s < t_gsi_hi < t_gsi_lo       # rejections cost target decodes
+    assert t_rsd < t_gsi_hi                # RSD skips the scoring pass
+    assert t_gsi_hi < t_b                  # the paper's headline claim
+
+
+# ---------------------------------------------------------------------------
+# token-level speculative decoding exactness
+# ---------------------------------------------------------------------------
+
+def test_speculative_verify_statistics():
+    V, k, B = 8, 1, 40_000
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    logits_S = jnp.broadcast_to(jax.random.normal(k1, (1, k, V)), (B, k, V))
+    logits_B = jnp.broadcast_to(jax.random.normal(k2, (1, k, V)), (B, k, V))
+    draft = jax.random.categorical(k3, logits_S[:, 0])[:, None]
+    res = speculative_verify(jax.random.PRNGKey(4), draft, logits_S,
+                             logits_B)
+    # final token: draft if accepted else residual resample
+    final = np.where(np.asarray(res.num_accepted) == 1,
+                     np.asarray(draft[:, 0]), np.asarray(res.resample_tok))
+    emp = np.bincount(final, minlength=V) / B
+    target = np.asarray(jax.nn.softmax(logits_B[0, 0]))
+    np.testing.assert_allclose(emp, target, atol=0.02)

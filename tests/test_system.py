@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests: the paper's pipeline at miniature scale.
+
+Trains a draft/target/PRM triple on the synthetic reasoning task, serves
+with GSI and the baselines, and checks the qualitative claims the paper
+makes (method ordering is checked statistically in benchmarks/; here we
+assert the pipeline produces well-formed, graded outputs end to end).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig, TrainConfig
+from repro.data import SyntheticReasoningTask
+from repro.launch.serve import evaluate, toy_triple, train_triple
+from repro.serving import GSIServingEngine
+
+
+@pytest.fixture(scope="module")
+def trained_triple():
+    task = SyntheticReasoningTask(seed=0, min_terms=2, max_terms=3,
+                                  max_value=9)
+    d, t, p = toy_triple()
+    ps, pb, pp = train_triple(task, d, t, p, steps_draft=80,
+                              steps_target=180, batch=24, seq=48)
+    return task, (d, t, p), (ps, pb, pp)
+
+
+def test_gsi_pipeline_end_to_end(trained_triple):
+    task, cfgs, params = trained_triple
+    g = GSIConfig(n=2, beta=8.0, threshold_u=0.4, max_step_tokens=8,
+                  max_steps=4, min_step_reward=0.0)
+    eng = GSIServingEngine(*cfgs, *params, g, max_seq=96)
+    problems = [task.sample_problem() for _ in range(4)]
+    res = evaluate(eng, task, problems, jax.random.PRNGKey(1))
+    assert 0.0 <= res["accuracy"] <= 1.0
+    assert 0.0 <= res["accept_rate"] <= 1.0
+    assert res["stats"].draft_tokens > 0
+    # tilted rewards were actually computed (log-ratio statistics exist)
+    assert len(res["stats"].logp_ratio) > 0
+
+
+def test_gsi_accept_rate_responds_to_threshold(trained_triple):
+    task, cfgs, params = trained_triple
+    problems = [task.sample_problem() for _ in range(4)]
+    rates = []
+    for u in (-10.0, 10.0):
+        g = GSIConfig(n=2, beta=8.0, threshold_u=u, max_step_tokens=8,
+                      max_steps=3, min_step_reward=0.0)
+        eng = GSIServingEngine(*cfgs, *params, g, max_seq=96)
+        res = evaluate(eng, task, problems, jax.random.PRNGKey(2))
+        rates.append(res["accept_rate"])
+    assert rates[0] == 1.0          # u = -inf accepts everything
+    assert rates[1] == 0.0          # u = +inf rejects everything
+
+
+def test_target_stronger_than_draft(trained_triple):
+    """The trained target LM should fit the task better than the draft."""
+    import jax.numpy as jnp
+    from repro.models import build_model
+    from repro.train.trainer import lm_loss
+    task, (d, t, _), (ps, pb, _) = trained_triple
+    batch = {k: jnp.asarray(v) for k, v in task.lm_batch(32, 48).items()}
+    _, m_s = lm_loss(build_model(d), ps, batch)
+    _, m_b = lm_loss(build_model(t), pb, batch)
+    assert float(m_b["loss"]) < float(m_s["loss"])
