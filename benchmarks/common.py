@@ -14,6 +14,7 @@ from repro.launch.serve import evaluate, toy_triple, train_triple
 from repro.serving import GSIServingEngine
 
 FAST = False          # set by run.py --fast
+SMOKE = False         # set by run.py --smoke (CI: tiniest budgets)
 _ROWS = []
 
 
@@ -47,7 +48,7 @@ def get_triple():
     """Train the draft/target/PRM triple once, shared by all benchmarks."""
     task = get_task()
     d, t, p = toy_triple()
-    steps = (100, 220) if FAST else (150, 320)
+    steps = (40, 90) if SMOKE else (100, 220) if FAST else (150, 320)
     print(f"# training triple (draft {steps[0]} / target {steps[1]} steps)",
           flush=True)
     ps, pb, pp = train_triple(task, d, t, p, steps_draft=steps[0],

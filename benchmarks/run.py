@@ -13,6 +13,7 @@ Tables covered (paper -> module):
     Table 4             ablations.py     chi^2 estimates
     Theorem 1 (C.5)     ablations.py     KL vs bound table
     kernels             kernels_bench.py VMEM-tiling micro numbers
+    serving (beyond-paper) throughput.py continuous-batching tokens/s
 """
 from __future__ import annotations
 
@@ -24,12 +25,17 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny training budgets, implies --fast")
     ap.add_argument("--only", default=None,
-                    help="comma list: accuracy,latency,ablations,kernels")
+                    help="comma list: accuracy,latency,ablations,kernels,"
+                         "throughput")
     args = ap.parse_args()
 
     from benchmarks import common
+    args.fast = args.fast or args.smoke
     common.FAST = args.fast
+    common.SMOKE = args.smoke
     only = set(args.only.split(",")) if args.only else None
 
     t0 = time.time()
@@ -50,6 +56,9 @@ def main() -> None:
     if want("latency"):
         from benchmarks import latency
         latency.run(args.fast)
+    if want("throughput"):
+        from benchmarks import throughput
+        throughput.run(args.fast)
 
     print(f"# total {time.time() - t0:.1f}s, {len(__import__('benchmarks.common', fromlist=['all_rows']).all_rows())} rows",
           flush=True)

@@ -1,9 +1,9 @@
 """End-to-end serving driver (the paper's kind of system).
 
 Trains the draft/target/PRM triple on the synthetic reasoning task, then
-serves a batch of requests with GSI and prints per-request reasoning traces
-with tilted rewards (the paper's Figure 3 style), plus accuracy/acceptance
-against the baselines.
+serves a queue of requests with GSI through the continuous-batching
+scheduler and prints per-request reasoning traces with tilted rewards (the
+paper's Figure 3 style), plus accuracy/acceptance against the baselines.
 
     PYTHONPATH=src python examples/serve_gsi.py [--requests 8] [--n 4]
 """
@@ -15,8 +15,8 @@ import numpy as np
 from repro.config import GSIConfig
 from repro.data import EOS, SEP, SyntheticReasoningTask
 from repro.data.synthetic import D0, tokens_to_int
-from repro.launch.serve import evaluate, toy_triple, train_triple
-from repro.serving import GSIServingEngine
+from repro.launch.serve import evaluate_queued, toy_triple, train_triple
+from repro.serving import GSIScheduler, GSIServingEngine
 
 
 def fmt(tokens):
@@ -56,29 +56,30 @@ def main():
     problems = [task.sample_problem() for _ in range(args.requests)]
     g = GSIConfig(n=args.n, beta=8.0, threshold_u=0.4, max_step_tokens=8,
                   max_steps=6, min_step_reward=0.0)
+    capacity = max(1, args.requests // 2)   # offered load 2x capacity
     for mode in ["gsi", "rsd", "sbon_s", "sbon_b"]:
         eng = GSIServingEngine(d, t, p, ps, pb, pp, g, mode=mode,
                                max_seq=112)
-        res = evaluate(eng, task, problems, jax.random.PRNGKey(1))
+        res = evaluate_queued(eng, task, problems, jax.random.PRNGKey(1),
+                              capacity=capacity)
         print(f"{mode:8s} accuracy={res['accuracy']:.3f} "
-              f"accept={res['accept_rate']:.2f} wall={res['wall_s']:.1f}s")
-        if mode == "gsi":
-            gsi_res = res
+              f"accept={res['accept_rate']:.2f} wall={res['wall_s']:.1f}s "
+              f"tokens/s={res['tokens_per_s']:.1f} "
+              f"p95={res['latency_p95']*1e3:.0f}ms")
 
     print("\n--- sample GSI reasoning traces (Fig. 3 style) ---")
     eng = GSIServingEngine(d, t, p, ps, pb, pp, g, max_seq=112)
-    responses, _ = eng.run(
-        np.stack([np.pad(np.array(pr.prompt, np.int32),
-                         (0, max(len(q.prompt) for q in problems)
-                          - len(pr.prompt))) for pr in problems]),
-        jax.random.PRNGKey(2))
+    sched = GSIScheduler(eng, capacity=capacity)
+    ids = [sched.submit(np.array(pr.prompt, np.int32))
+           for pr in problems]
+    results = sched.run(jax.random.PRNGKey(2))
     for i in range(min(3, args.requests)):
-        pr = problems[i]
-        flat = [t_ for s in responses[i] for t_ in s]
-        print(f"\nprompt: {fmt(pr.prompt)}   (true total {pr.total})")
-        for j, s in enumerate(responses[i]):
+        pr, resp = problems[i], results[ids[i]]
+        print(f"\nprompt: {fmt(pr.prompt)}   (true total {pr.total})  "
+              f"[{resp.finish_reason}, {resp.engine_steps} steps]")
+        for j, s in enumerate(resp.steps):
             print(f"  step {j}: {fmt(s)}")
-        print(f"  correct: {task.is_correct(pr, flat)}")
+        print(f"  correct: {task.is_correct(pr, list(resp.tokens))}")
 
 
 if __name__ == "__main__":

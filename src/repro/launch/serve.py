@@ -1,9 +1,10 @@
 """GSI serving launcher: train a draft/target/PRM triple on the synthetic
-reasoning task (or load checkpoints), then serve batched requests with GSI
-and report accuracy / acceptance / latency-model numbers.
+reasoning task (or load checkpoints), then serve queued requests through
+the continuous-batching scheduler and report accuracy / acceptance /
+throughput / latency-model numbers.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16 --n 4 \
-        --method gsi [--train-steps 300]
+        --method gsi --capacity 8 [--train-steps 300]
 """
 from __future__ import annotations
 
@@ -16,7 +17,7 @@ import numpy as np
 
 from repro.config import GSIConfig, ModelConfig, TrainConfig
 from repro.data import SyntheticReasoningTask, PAD
-from repro.serving import GSIServingEngine
+from repro.serving import GSIScheduler, GSIServingEngine
 from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
 from repro.train import Trainer
 
@@ -50,6 +51,7 @@ def train_triple(task, draft_cfg, target_cfg, prm_cfg, *, steps_draft=200,
 
 
 def evaluate(engine, task, problems, rng):
+    """Fixed-batch evaluation through ``engine.run`` (one gang)."""
     Lp = max(len(p.prompt) for p in problems)
     prompts = np.zeros((len(problems), Lp), np.int32)
     for i, p in enumerate(problems):
@@ -66,6 +68,37 @@ def evaluate(engine, task, problems, rng):
             "wall_s": wall, "stats": stats}
 
 
+def evaluate_queued(engine, task, problems, rng, *, capacity: int,
+                    continuous: bool = True):
+    """Queued evaluation through the continuous-batching scheduler.
+
+    All requests are submitted up front (offered load >= capacity); the
+    scheduler packs them onto ``capacity`` slots, re-admitting queued
+    prompts into freed slots.  Returns accuracy plus throughput/latency.
+    """
+    sched = GSIScheduler(engine, capacity=capacity, continuous=continuous,
+                         collect_stats=True)
+    ids = [sched.submit(np.asarray(p.prompt, np.int32)) for p in problems]
+    t0 = time.time()
+    results = sched.run(rng)
+    wall = time.time() - t0
+    correct, tokens = 0, 0
+    latencies = []
+    for prob, rid in zip(problems, ids):
+        resp = results[rid]
+        correct += task.is_correct(prob, list(resp.tokens))
+        tokens += resp.num_tokens
+        latencies.append(resp.latency)
+    lat = np.sort(np.asarray(latencies)) if latencies else np.zeros(1)
+    return {"accuracy": correct / len(problems),
+            "accept_rate": sched.stats.accept_rate,
+            "steps": sched.engine_steps, "wall_s": wall,
+            "tokens": tokens, "tokens_per_s": tokens / max(wall, 1e-9),
+            "latency_p50": float(np.percentile(lat, 50)),
+            "latency_p95": float(np.percentile(lat, 95)),
+            "stats": sched.stats, "responses": results}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -75,6 +108,11 @@ def main() -> None:
     ap.add_argument("--beta", type=float, default=20.0)
     ap.add_argument("--u", type=float, default=0.5)
     ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="scheduler slots (0 = half the request count)")
+    ap.add_argument("--gang", action="store_true",
+                    help="fixed-batch gang scheduling instead of "
+                         "continuous batching")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -87,13 +125,20 @@ def main() -> None:
 
     g = GSIConfig(n=args.n, beta=args.beta, threshold_u=args.u,
                   max_step_tokens=8, max_steps=8)
+    capacity = args.capacity or max(1, args.requests // 2)
     engine = GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
                               mode=args.method, max_seq=128)
     problems = [task.sample_problem() for _ in range(args.requests)]
-    res = evaluate(engine, task, problems, jax.random.PRNGKey(args.seed + 1))
-    print(f"method={args.method} n={args.n}: accuracy={res['accuracy']:.3f} "
+    res = evaluate_queued(engine, task, problems,
+                          jax.random.PRNGKey(args.seed + 1),
+                          capacity=capacity, continuous=not args.gang)
+    print(f"method={args.method} n={args.n} capacity={capacity} "
+          f"({'gang' if args.gang else 'continuous'}): "
+          f"accuracy={res['accuracy']:.3f} "
           f"accept={res['accept_rate']:.2f} steps={res['steps']} "
-          f"wall={res['wall_s']:.1f}s")
+          f"wall={res['wall_s']:.1f}s tokens/s={res['tokens_per_s']:.1f} "
+          f"p50={res['latency_p50']*1e3:.0f}ms "
+          f"p95={res['latency_p95']*1e3:.0f}ms")
 
     lm = LatencyModel(
         ModelCost(draft_cfg.param_count(), 1024),

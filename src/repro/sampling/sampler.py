@@ -97,12 +97,18 @@ def sample_steps(model, params, cache, last_token, positions, rng, *,
 
 
 def score_and_append(model, params, cache, last_token, positions,
-                     step_tokens, *, return_rewards: bool = False):
+                     step_tokens, *, return_rewards: bool = False,
+                     row_live=None):
     """Teacher-force ``step_tokens`` (B,L; PAD-padded) through the model.
 
     Returns (logprob (B,), new_cache, new_positions[, rewards (B,)]).
     ``rewards`` (PRM models) is the reward head evaluated at the *last* real
     token of each step.  The cache is advanced by exactly the real tokens.
+
+    ``row_live`` (B,) bool freezes whole requests regardless of their token
+    content — the prefill-into-slot path of the continuous-batching
+    scheduler commits prompt tails for newly admitted slots while requests
+    occupying the other slots pass through untouched.
     """
     B, L = step_tokens.shape
 
@@ -110,6 +116,8 @@ def score_and_append(model, params, cache, last_token, positions,
         cache, tok, pos, lp, rw, fed_live = carry
         target = xs                                     # (B,) token to score
         live = target != PAD
+        if row_live is not None:
+            live = live & row_live
         out = model.decode_step(params, cache, tok[:, None], pos, live=live,
                                 return_hidden=return_rewards)
         if return_rewards:

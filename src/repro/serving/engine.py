@@ -25,6 +25,23 @@ def repeat_cache(cache, n: int, stacked_key: str = "blocks"):
     return jax.tree_util.tree_map_with_path(rep, cache)
 
 
+def reset_cache_rows(cache, reset_mask, stacked_key: str = "blocks"):
+    """Zero the cache rows of requests where ``reset_mask`` (B,) is True.
+
+    Used by the slot pool when a freed slot is re-admitted with a new
+    prompt: attention KV beyond the reset ``pos`` is already masked out by
+    the decode mask, but recurrent/RWKV state (and ring buffers) carry the
+    previous occupant, so the whole row is cleared before prefill.
+    """
+    def zero(path, leaf):
+        d = _batch_dim(path, stacked_key)
+        shape = [1] * leaf.ndim
+        shape[d] = reset_mask.shape[0]
+        m = reset_mask.reshape(shape)
+        return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+    return jax.tree_util.tree_map_with_path(zero, cache)
+
+
 def expand_requests(x, n: int):
     """(B, ...) -> (B*n, ...) by repeating each request n times."""
     return jnp.repeat(x, n, axis=0)

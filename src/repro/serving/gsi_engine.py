@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +31,19 @@ from repro.core import gsi_select, rsd_select, soft_bon_select
 from repro.models import build_model
 from repro.sampling import sample_steps, score_and_append
 from repro.serving.engine import (expand_requests, fold_candidates,
-                                  repeat_cache, take_candidates,
-                                  take_per_request)
+                                  repeat_cache, reset_cache_rows,
+                                  take_candidates, take_per_request)
 
 PAD = 0
+
+
+class StepResult(NamedTuple):
+    """Host-side outcome of one engine decode step (all numpy, (B,...))."""
+    chosen: np.ndarray       # (B, L) committed step tokens (PAD-padded)
+    done_prev: np.ndarray    # (B,) slot was already done before this step
+    eos: np.ndarray          # (B,) step emitted EOS
+    failed: np.ndarray       # (B,) B.2 early-stop: all draft rewards low
+    accept: np.ndarray       # (B,) draft step accepted (True in sbon_b)
 
 
 @dataclass
@@ -77,23 +86,40 @@ class GSIServingEngine:
         self._jit_draft_phase = jax.jit(self._draft_phase)
         self._jit_target_phase = jax.jit(self._target_phase)
         self._jit_commit = jax.jit(self._commit)
+        self._jit_admit = jax.jit(self._admit)
 
     # ------------------------------------------------------------------
     # State
     # ------------------------------------------------------------------
-    def init_state(self, prompts: np.ndarray):
-        """prompts: (B, Lp) PAD-padded token array."""
-        B = prompts.shape[0]
-        caches = {
-            "S": self.draft.init_cache(B, self.max_seq),
-            "B": self.target.init_cache(B, self.max_seq),
-            "P": self.prm.init_cache(B, self.max_seq),
+    def _fresh_caches(self, batch: int):
+        return {
+            "S": self.draft.init_cache(batch, self.max_seq),
+            "B": self.target.init_cache(batch, self.max_seq),
+            "P": self.prm.init_cache(batch, self.max_seq),
         }
+
+    def fresh_state(self, batch: int):
+        """An all-free slot-pool state: every row is done/inert until a
+        prompt is admitted into it (scheduler API)."""
+        return {
+            "caches": self._fresh_caches(batch),
+            "pending": jnp.full((batch,), PAD, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "done": jnp.ones((batch,), bool),
+        }
+
+    def init_state(self, prompts: np.ndarray):
+        """prompts: (B, Lp) PAD-padded token array.
+
+        All-PAD rows (padding a partial batch up to capacity) start done,
+        so they never decode or hold up ``run``'s all-done early exit.
+        """
+        B = prompts.shape[0]
         state = {
-            "caches": caches,
+            "caches": self._fresh_caches(B),
             "pending": jnp.asarray(prompts[:, 0], jnp.int32),
             "pos": jnp.zeros((B,), jnp.int32),
-            "done": jnp.zeros((B,), bool),
+            "done": jnp.asarray((np.asarray(prompts) == PAD).all(axis=1)),
         }
         if prompts.shape[1] > 1:
             state = self._jit_commit(state, jnp.asarray(prompts[:, 1:],
@@ -103,21 +129,23 @@ class GSIServingEngine:
     # ------------------------------------------------------------------
     # Jitted phases
     # ------------------------------------------------------------------
-    def _commit(self, state, step_tokens):
+    def _commit(self, state, step_tokens, row_live=None):
         """Append step_tokens (B,L) to the three committed caches."""
         ps, pb, pp = self.params
         caches = state["caches"]
         new = {}
         _, new["S"], pos = score_and_append(
             self.draft, ps, caches["S"], state["pending"], state["pos"],
-            step_tokens)
+            step_tokens, row_live=row_live)
         _, new["B"], _ = score_and_append(
             self.target, pb, caches["B"], state["pending"], state["pos"],
-            step_tokens)
+            step_tokens, row_live=row_live)
         _, new["P"], _, _ = score_and_append(
             self.prm, pp, caches["P"], state["pending"], state["pos"],
-            step_tokens, return_rewards=True)
+            step_tokens, return_rewards=True, row_live=row_live)
         length = jnp.sum(step_tokens != PAD, axis=1)
+        if row_live is not None:
+            length = jnp.where(row_live, length, 0)
         pending = jnp.where(
             length > 0,
             jnp.take_along_axis(
@@ -126,6 +154,26 @@ class GSIServingEngine:
             state["pending"])
         return {"caches": new, "pending": pending, "pos": pos,
                 "done": state["done"]}
+
+    def _admit(self, state, admit_mask, prompts):
+        """Prefill prompts (B,Lp; PAD-padded) into the slots where
+        ``admit_mask`` is True; every other slot passes through untouched.
+
+        Admitted rows are zeroed (stale recurrent state / ring buffers from
+        the previous occupant), bookkeeping is reset to the engine invariant
+        (cache holds prompt[:-1], pending = prompt[-1]) and the prompt tail
+        is teacher-forced through all three models via the regular commit
+        path with ``row_live`` masking.
+        """
+        caches = reset_cache_rows(state["caches"], admit_mask)
+        state = {
+            "caches": caches,
+            "pending": jnp.where(admit_mask, prompts[:, 0],
+                                 state["pending"]),
+            "pos": jnp.where(admit_mask, 0, state["pos"]),
+            "done": jnp.where(admit_mask, False, state["done"]),
+        }
+        return self._commit(state, prompts[:, 1:], row_live=admit_mask)
 
     def _draft_phase(self, state, rng):
         """Sample n draft candidates; score with target + PRM."""
@@ -225,11 +273,80 @@ class GSIServingEngine:
     # ------------------------------------------------------------------
     # Host loop
     # ------------------------------------------------------------------
+    def step_decode(self, state, rng, rng_target=None, *,
+                    stats: Optional[EngineStats] = None,
+                    collect_stats: bool = False):
+        """One engine step over the whole (fixed-size) batch.
+
+        Runs the mode's phase(s) on every live slot (done slots are masked
+        and stay inert), commits the chosen step to the three caches, and
+        folds EOS / B.2 early-stop into ``state["done"]``.  Returns
+        ``(state, StepResult)``; the caller (``run`` or the
+        continuous-batching scheduler) owns response assembly.
+        """
+        g = self.gcfg
+        B = int(state["done"].shape[0])
+        if rng_target is None:
+            rng, rng_target = jax.random.split(rng)
+        if self.mode == "sbon_b":
+            tp = self._jit_target_phase(state, rng)
+            chosen = tp["chosen"]
+            accept = np.ones((B,), bool)
+            max_r = np.asarray(jnp.max(tp["rewards"], -1))
+            if stats is not None:
+                stats.target_tokens += int(
+                    np.sum(np.asarray(chosen) != PAD)) * g.n
+        else:
+            dp = self._jit_draft_phase(state, rng)
+            accept = np.asarray(dp["accept"])
+            chosen = dp["chosen"]
+            max_r = np.asarray(dp["max_reward"])
+            if stats is not None:
+                stats.draft_tokens += int(
+                    np.sum(np.asarray(dp["cands"]) != PAD))
+                if collect_stats:
+                    stats.raw_rewards.append(np.asarray(dp["rewards"]))
+                    if "logp_B" in dp:
+                        stats.logp_ratio.append(
+                            np.asarray(dp["logp_B"] - dp["logp_S"]))
+                        stats.tilted_rewards.append(np.asarray(dp["tilted"]))
+            if not accept.all():
+                tp = self._jit_target_phase(state, rng_target)
+                chosen = jnp.where(jnp.asarray(accept)[:, None],
+                                   chosen, tp["chosen"])
+                if stats is not None:
+                    stats.target_tokens += int(
+                        np.sum(np.asarray(tp["chosen"]) != PAD)) * g.n
+            if stats is not None:
+                live = ~np.asarray(state["done"])
+                stats.decisions += int(live.sum())
+                stats.accepted += int((accept & live).sum())
+
+        # early stop (paper B.2): all draft rewards below min threshold
+        failed = max_r < g.min_step_reward
+        chosen_np = np.asarray(chosen)
+        done_prev = np.asarray(state["done"])
+        state = self._jit_commit(state, chosen)
+        eos = np.asarray(jnp.any(chosen == g.eos_token_id, axis=1))
+        new_done = done_prev | eos | (failed & ~done_prev)
+        state["done"] = jnp.asarray(new_done)
+        if stats is not None:
+            stats.steps += 1
+        return state, StepResult(chosen=chosen_np, done_prev=done_prev,
+                                 eos=eos, failed=failed, accept=accept)
+
+    def admit(self, state, admit_mask: np.ndarray, prompts: np.ndarray):
+        """Scheduler API: prefill ``prompts`` (B,Lp) into masked slots."""
+        return self._jit_admit(state, jnp.asarray(admit_mask, bool),
+                               jnp.asarray(prompts, jnp.int32))
+
     def run(self, prompts: np.ndarray, rng, *,
             collect_stats: bool = True):
-        """Generate until EOS/max_steps.  Returns (responses, stats).
+        """Fixed-batch run-to-completion: generate until EOS/max_steps.
 
-        responses: list of B lists of step-token arrays.
+        Returns (responses, stats); responses is a list of B lists of
+        step-token arrays.  Kept as the simple batch API — the
+        continuous-batching path lives in ``repro.serving.scheduler``.
         """
         g = self.gcfg
         B = prompts.shape[0]
@@ -239,53 +356,13 @@ class GSIServingEngine:
 
         for it in range(g.max_steps):
             rng, k1, k2 = jax.random.split(rng, 3)
-            if self.mode == "sbon_b":
-                tp = self._jit_target_phase(state, k1)
-                chosen = tp["chosen"]
-                accept = np.ones((B,), bool)
-                sel = np.asarray(tp["selected"])
-                max_r = np.asarray(jnp.max(tp["rewards"], -1))
-                stats.target_tokens += int(
-                    np.sum(np.asarray(chosen) != PAD)) * g.n
-            else:
-                dp = self._jit_draft_phase(state, k1)
-                accept = np.asarray(dp["accept"])
-                chosen = dp["chosen"]
-                sel = np.asarray(dp["selected"])
-                max_r = np.asarray(dp["max_reward"])
-                stats.draft_tokens += int(
-                    np.sum(np.asarray(dp["cands"]) != PAD))
-                if collect_stats:
-                    stats.raw_rewards.append(np.asarray(dp["rewards"]))
-                    if "logp_B" in dp:
-                        stats.logp_ratio.append(
-                            np.asarray(dp["logp_B"] - dp["logp_S"]))
-                        stats.tilted_rewards.append(np.asarray(dp["tilted"]))
-                if not accept.all():
-                    tp = self._jit_target_phase(state, k2)
-                    chosen = jnp.where(jnp.asarray(accept)[:, None],
-                                       chosen, tp["chosen"])
-                    stats.target_tokens += int(
-                        np.sum(np.asarray(tp["chosen"]) != PAD)) * g.n
-                live = ~np.asarray(state["done"])
-                stats.decisions += int(live.sum())
-                stats.accepted += int((accept & live).sum())
-
-            # early stop (paper B.2): all draft rewards below min threshold
-            failed = max_r < self.gcfg.min_step_reward
-            chosen_np = np.asarray(chosen)
-            done_prev = np.asarray(state["done"])
+            state, res = self.step_decode(state, k1, k2, stats=stats,
+                                          collect_stats=collect_stats)
             for b in range(B):
-                if not done_prev[b]:
-                    toks = chosen_np[b][chosen_np[b] != PAD]
+                if not res.done_prev[b]:
+                    toks = res.chosen[b][res.chosen[b] != PAD]
                     responses[b].append(toks)
-            state = self._jit_commit(state, chosen)
-            eos = np.asarray(
-                jnp.any(chosen == self.gcfg.eos_token_id, axis=1))
-            new_done = done_prev | eos | (failed & ~done_prev)
-            state["done"] = jnp.asarray(new_done)
-            stats.steps += 1
-            if new_done.all():
+            if np.asarray(state["done"]).all():
                 break
         stats.requests_finished = int(np.asarray(state["done"]).sum())
         return responses, stats

@@ -1,0 +1,231 @@
+"""Continuous-batching request scheduler for the GSI serving engine.
+
+The engine decodes a *fixed-capacity* batch (one jit compilation, stable
+shapes); the scheduler keeps that batch full.  Requests wait in an arrival
+queue, admission control maps them onto free slots of the
+:class:`~repro.serving.slots.SlotPool` (prompt prefill into the vacated
+row via the engine's masked ``admit`` commit), and every engine step the
+scheduler harvests finished slots — EOS, per-request step budget, or the
+paper's B.2 early-stop — frees them, and admits the next queued prompts on
+the following step.  This is the serving-layer analogue of the capacity
+reclamation in Speculative Rejection (Sun et al., 2024) / RSD (Liao et
+al., 2025): a request that finishes at step 3 stops paying for its three
+KV-cache rows immediately instead of idling until the slowest request in
+its gang completes.
+
+``continuous=False`` degrades to gang scheduling (admit only into an empty
+pool, run the batch to completion) — the fixed-batch ``run()`` discipline,
+timed against the continuous mode in ``benchmarks/throughput.py``.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.gsi_engine import EngineStats, GSIServingEngine
+from repro.serving.slots import PAD, SlotPool, pack_prompts
+
+
+@dataclass
+class Request:
+    id: str
+    prompt: np.ndarray            # 1-D int32 token array (no padding)
+    max_steps: int                # per-request reasoning-step budget
+    arrival_time: float = 0.0     # seconds after scheduler start
+    submitted_at: float = 0.0     # wall clock (perf_counter) at submit
+
+
+@dataclass
+class Response:
+    request_id: str
+    steps: List[np.ndarray] = field(default_factory=list)
+    finish_reason: str = ""       # "eos" | "low_reward" | "max_steps"
+    engine_steps: int = 0         # decode steps this request consumed
+    admitted_at: float = 0.0      # seconds since scheduler start
+    finished_at: float = 0.0
+    arrival_time: float = 0.0
+
+    @property
+    def tokens(self) -> np.ndarray:
+        if not self.steps:
+            return np.zeros((0,), np.int32)
+        return np.concatenate([np.asarray(s, np.int32) for s in self.steps])
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.tokens.size)
+
+    @property
+    def latency(self) -> float:
+        """Queueing + decode latency, seconds since the request arrived."""
+        return self.finished_at - self.arrival_time
+
+
+class GSIScheduler:
+    """Drives ``GSIServingEngine.step_decode`` over a slot pool.
+
+    Parameters
+    ----------
+    engine:      a built :class:`GSIServingEngine` (any mode).
+    capacity:    number of slots == engine batch size (jit-stable).
+    continuous:  admit into freed slots mid-flight (True) or only into an
+                 empty pool (False, gang/fixed-batch discipline).
+    collect_stats: forward per-step reward/ratio arrays into ``stats``.
+    """
+
+    def __init__(self, engine: GSIServingEngine, *, capacity: int,
+                 continuous: bool = True, prompt_pad_len: int = 0,
+                 collect_stats: bool = False):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.engine = engine
+        self.capacity = capacity
+        self.continuous = continuous
+        self.collect_stats = collect_stats
+        self.pool = SlotPool(capacity)
+        self.queue: deque = deque()
+        self.state = engine.fresh_state(capacity)
+        self.stats = EngineStats()
+        self.responses: Dict[str, Response] = {}
+        self.engine_steps = 0
+        self._partial: Dict[int, Response] = {}      # slot -> in-flight
+        self._steps_taken = np.zeros((capacity,), np.int64)
+        self._budget = np.zeros((capacity,), np.int64)
+        self._pad = int(prompt_pad_len)
+        self._seq = 0
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    # Submission / admission control
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, request_id: Optional[str] = None,
+               max_steps: Optional[int] = None,
+               arrival_time: float = 0.0) -> str:
+        """Queue a prompt; returns the request id."""
+        g = self.engine.gcfg
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        budget = int(max_steps if max_steps is not None else g.max_steps)
+        if budget < 1:
+            raise ValueError("max_steps must be >= 1")
+        need = prompt.size - 1 + budget * g.max_step_tokens
+        if need > self.engine.max_seq:
+            raise ValueError(
+                f"request needs up to {need} cache positions but engine "
+                f"max_seq={self.engine.max_seq}; shorten the prompt or "
+                f"lower max_steps")
+        if request_id is None:
+            request_id = f"req-{self._seq}"
+        self._seq += 1
+        self.queue.append(Request(
+            id=request_id, prompt=prompt, max_steps=budget,
+            arrival_time=float(arrival_time),
+            submitted_at=time.perf_counter()))
+        if len(self.queue) > 1 and \
+                arrival_time < self.queue[-2].arrival_time:
+            # keep the queue arrival-ordered (stable for equal arrivals) so
+            # an early arrival is never head-of-line blocked behind a
+            # not-yet-arrived request submitted before it
+            self.queue = deque(sorted(self.queue,
+                                      key=lambda r: r.arrival_time))
+        return request_id
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    def _ready(self, now: float) -> bool:
+        return bool(self.queue) and self.queue[0].arrival_time <= now
+
+    def _admit_ready(self, now: float) -> List[str]:
+        """Move arrived requests from the queue into free slots."""
+        if not self.continuous and self.pool.num_live > 0:
+            return []
+        free = self.pool.free_slots()
+        batch: Dict[int, Request] = {}
+        while free and self._ready(now):
+            req = self.queue.popleft()
+            batch[free.pop(0)] = req
+        if not batch:
+            return []
+        longest = max(r.prompt.size for r in batch.values())
+        if longest > self._pad:
+            # round up so prompt-length jitter doesn't retrace _jit_admit
+            self._pad = -(-longest // 8) * 8
+        packed = pack_prompts({s: r.prompt for s, r in batch.items()},
+                              self.capacity, self._pad)
+        mask = np.zeros((self.capacity,), bool)
+        for slot, req in batch.items():
+            mask[slot] = True
+            self.pool.claim(slot, req.id)
+            self._steps_taken[slot] = 0
+            self._budget[slot] = req.max_steps
+            self._partial[slot] = Response(
+                request_id=req.id, admitted_at=now,
+                arrival_time=req.arrival_time)
+        self.state = self.engine.admit(self.state, mask, packed)
+        return [r.id for r in batch.values()]
+
+    # ------------------------------------------------------------------
+    # Stepping
+    # ------------------------------------------------------------------
+    def step(self, rng, rng_target=None) -> List[Response]:
+        """Admit ready requests, run one engine decode step, harvest and
+        free finished slots.  Returns the responses finished this step."""
+        now = self._now()
+        self._admit_ready(now)
+        if self.pool.num_live == 0:
+            return []
+        self.state, res = self.engine.step_decode(
+            self.state, rng, rng_target, stats=self.stats,
+            collect_stats=self.collect_stats)
+        self.engine_steps += 1
+        finished: List[Response] = []
+        force_done = np.zeros((self.capacity,), bool)
+        for slot in self.pool.live_slots():
+            resp = self._partial[slot]
+            toks = res.chosen[slot]
+            resp.steps.append(toks[toks != PAD])
+            resp.engine_steps += 1
+            self._steps_taken[slot] += 1
+            reason = ""
+            if res.eos[slot]:
+                reason = "eos"
+            elif res.failed[slot]:
+                reason = "low_reward"
+            elif self._steps_taken[slot] >= self._budget[slot]:
+                reason = "max_steps"
+                force_done[slot] = True
+            if reason:
+                resp.finish_reason = reason
+                resp.finished_at = self._now()
+                self.pool.release(slot)
+                del self._partial[slot]
+                self.responses[resp.request_id] = resp
+                self.stats.requests_finished += 1
+                finished.append(resp)
+        if force_done.any():
+            self.state["done"] = self.state["done"] | jnp.asarray(force_done)
+        return finished
+
+    def run(self, rng) -> Dict[str, Response]:
+        """Drain the queue and all live slots; returns id -> Response."""
+        self._t0 = time.perf_counter()
+        while self.queue or self.pool.num_live:
+            if self.pool.num_live == 0 and not self._ready(self._now()):
+                # idle until the next arrival
+                wait = self.queue[0].arrival_time - self._now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+                continue
+            rng, k1, k2 = jax.random.split(rng, 3)
+            self.step(k1, k2)
+        return dict(self.responses)

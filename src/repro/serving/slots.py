@@ -1,0 +1,89 @@
+"""Slot-pool KV-cache management for the continuous-batching scheduler.
+
+The engine's state is a fixed-capacity batch: every row ("slot") owns one
+row of each of the three committed caches (draft pi_S, target pi_B, PRM),
+``pos``/``pending``/``done`` bookkeeping, and — while occupied — one live
+request.  :class:`SlotPool` is the host-side ledger mapping slots to
+request ids; the array-level work (zeroing freed rows, masked prompt
+prefill) lives in ``serving/engine.py::reset_cache_rows`` and
+``GSIServingEngine._admit``.
+
+Why slots are safe to reuse without re-allocating caches: the decode
+attention mask only admits cache positions ``<= pos``, so after a slot's
+``pos`` is reset to 0 the previous occupant's KV is invisible and gets
+overwritten as the new request advances; recurrent/RWKV state and ring
+buffers are explicitly zeroed by ``reset_cache_rows``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PAD = 0
+
+
+@dataclass
+class SlotPool:
+    """Fixed-capacity slot ledger: request id per slot (None = free)."""
+    capacity: int
+    slot_request: List[Optional[str]] = field(default=None)
+
+    def __post_init__(self):
+        if self.slot_request is None:
+            self.slot_request = [None] * self.capacity
+        assert len(self.slot_request) == self.capacity
+
+    # -- queries -------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_request) if r is None]
+
+    def live_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_request) if r is not None]
+
+    @property
+    def num_free(self) -> int:
+        return len(self.free_slots())
+
+    @property
+    def num_live(self) -> int:
+        return self.capacity - self.num_free
+
+    def request_of(self, slot: int) -> Optional[str]:
+        return self.slot_request[slot]
+
+    def slot_of(self, request_id: str) -> Optional[int]:
+        for i, r in enumerate(self.slot_request):
+            if r == request_id:
+                return i
+        return None
+
+    # -- transitions ---------------------------------------------------
+    def claim(self, slot: int, request_id: str) -> None:
+        if self.slot_request[slot] is not None:
+            raise ValueError(f"slot {slot} already holds "
+                             f"{self.slot_request[slot]!r}")
+        self.slot_request[slot] = request_id
+
+    def release(self, slot: int) -> str:
+        rid = self.slot_request[slot]
+        if rid is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.slot_request[slot] = None
+        return rid
+
+
+def pack_prompts(prompts: Dict[int, np.ndarray], capacity: int,
+                 pad_len: int) -> np.ndarray:
+    """Build the (capacity, pad_len) admission array: slot -> prompt tokens,
+    PAD everywhere else (non-admitted rows are inert under row_live)."""
+    out = np.full((capacity, pad_len), PAD, np.int32)
+    for slot, toks in prompts.items():
+        toks = np.asarray(toks, np.int32)
+        if toks.ndim != 1 or toks.size < 1:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if toks.size > pad_len:
+            raise ValueError(f"prompt length {toks.size} > pad_len {pad_len}")
+        out[slot, :toks.size] = toks
+    return out

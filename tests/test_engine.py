@@ -77,6 +77,28 @@ def test_engine_commit_matches_prefill(engine_setup):
     assert int(state["pending"][0]) == 8
 
 
+def test_admit_matches_init_state(engine_setup):
+    """Prefill-into-slot (masked admission commit) == init_state prefill."""
+    draft, target, prm, ps, pb, pp = engine_setup
+    g = GSIConfig(n=2, max_step_tokens=4, max_steps=2)
+    eng = GSIServingEngine(draft, target, prm, ps, pb, pp, g, max_seq=32)
+    prompts = np.array([[5, 6, 7, 8], [9, 4, 3, 0]], np.int32)
+    ref = eng.init_state(prompts)
+    state = eng.admit(eng.fresh_state(2), np.array([True, True]), prompts)
+    np.testing.assert_array_equal(np.asarray(state["pos"]),
+                                  np.asarray(ref["pos"]))
+    np.testing.assert_array_equal(np.asarray(state["pending"]),
+                                  np.asarray(ref["pending"]))
+    # identical next-step logits from both states
+    m = build_model(draft)
+    lg_a, _ = m.decode_step(ps, state["caches"]["S"],
+                            state["pending"][:, None], state["pos"])
+    lg_r, _ = m.decode_step(ps, ref["caches"]["S"],
+                            ref["pending"][:, None], ref["pos"])
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_r),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_trained_engine_beats_random(tmp_path):
     """Tiny end-to-end: trained triple gets >0 accuracy on easy problems."""
     from repro.launch.serve import evaluate, toy_triple, train_triple

@@ -1,0 +1,232 @@
+"""Continuous-batching scheduler + slot-pool tests (tiny models)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig
+from repro.models import build_model
+from repro.serving import (GSIScheduler, GSIServingEngine, SlotPool,
+                           pack_prompts, reset_cache_rows)
+
+PAD = 0
+
+
+@pytest.fixture(scope="module")
+def engine(tiny_triple):
+    draft, target, prm = tiny_triple
+    ps = build_model(draft).init(jax.random.PRNGKey(0))
+    pb = build_model(target).init(jax.random.PRNGKey(1))
+    pp = build_model(prm).init(jax.random.PRNGKey(2))
+    g = GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                  min_step_reward=-1.0)
+    return GSIServingEngine(draft, target, prm, ps, pb, pp, g, max_seq=48)
+
+
+# ----------------------------------------------------------------------
+# SlotPool ledger
+# ----------------------------------------------------------------------
+
+def test_slot_pool_claim_release():
+    pool = SlotPool(3)
+    assert pool.free_slots() == [0, 1, 2]
+    pool.claim(1, "a")
+    assert pool.num_live == 1 and pool.slot_of("a") == 1
+    with pytest.raises(ValueError):
+        pool.claim(1, "b")
+    assert pool.release(1) == "a"
+    with pytest.raises(ValueError):
+        pool.release(1)
+    assert pool.num_free == 3
+
+
+def test_pack_prompts_layout():
+    packed = pack_prompts({0: np.array([5, 6]), 2: np.array([7])}, 3, 4)
+    np.testing.assert_array_equal(packed[0], [5, 6, PAD, PAD])
+    np.testing.assert_array_equal(packed[1], [PAD] * 4)
+    np.testing.assert_array_equal(packed[2], [7, PAD, PAD, PAD])
+    with pytest.raises(ValueError):
+        pack_prompts({0: np.arange(1, 6)}, 3, 4)
+
+
+# ----------------------------------------------------------------------
+# Cache helpers
+# ----------------------------------------------------------------------
+
+def test_reset_cache_rows_zeroes_only_masked(tiny_dense):
+    m = build_model(tiny_dense)
+    cache = jax.tree.map(lambda a: a + 1.0, m.init_cache(3, 8))
+    out = reset_cache_rows(cache, np.array([True, False, True]))
+    for path, leaf in jax.tree_util.tree_flatten_with_path(out)[0]:
+        d = 1 if any(getattr(p, "key", None) == "blocks" for p in path) \
+            else 0
+        moved = np.moveaxis(np.asarray(leaf), d, 0)
+        assert (moved[0] == 0).all() and (moved[2] == 0).all()
+        assert (moved[1] == 1).all()
+
+
+# ----------------------------------------------------------------------
+# Slot free / re-admit round-trip
+# ----------------------------------------------------------------------
+
+def test_slot_readmit_preserves_other_rows(engine):
+    """Freeing slot 0 and admitting a new prompt must leave slot 1's
+    *committed* cache region bit-identical (the admission commit may
+    idempotently pre-write the pending token's KV at ``pos``), set slot 0
+    to the prefill invariant (cache holds prompt[:-1], pending =
+    prompt[-1]), and leave slot 1's subsequent decode unchanged."""
+    state = engine.fresh_state(2)
+    state = engine.admit(state, np.array([True, True]),
+                         np.array([[5, 6, 7, PAD], [8, 9, 3, 4]], np.int32))
+    state, _ = engine.step_decode(state, jax.random.PRNGKey(0))
+    undisturbed = dict(state)
+    pos1 = int(state["pos"][1])
+    before = jax.tree_util.tree_flatten_with_path(state["caches"])[0]
+
+    state = engine.admit(state, np.array([True, False]),
+                         np.array([[9, 9, PAD, PAD], [PAD] * 4], np.int32))
+    after = jax.tree_util.tree_flatten_with_path(state["caches"])[0]
+    for (path, b), (_, a) in zip(before, after):
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        d = 1 if stacked else 0
+        row_b = np.moveaxis(np.asarray(b), d, 0)[1]
+        row_a = np.moveaxis(np.asarray(a), d, 0)[1]
+        if row_b.ndim >= 2:                   # attention KV: slice seq axis
+            seq_ax = 1 if stacked else 0
+            sl = [slice(None)] * row_b.ndim
+            sl[seq_ax] = slice(0, pos1)
+            row_b, row_a = row_b[tuple(sl)], row_a[tuple(sl)]
+        np.testing.assert_array_equal(row_b, row_a)
+    assert int(state["pos"][0]) == 1          # prompt[:-1] committed
+    assert int(state["pending"][0]) == 9      # pending = prompt[-1]
+    assert not bool(state["done"][0])
+
+    # behavioural round-trip: slot 1's next step is identical whether or
+    # not slot 0 was freed and re-admitted underneath it
+    _, res_ref = engine.step_decode(undisturbed, jax.random.PRNGKey(11))
+    _, res_new = engine.step_decode(state, jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(res_ref.chosen[1], res_new.chosen[1])
+
+
+def test_fresh_state_slots_are_inert(engine):
+    """Decoding an all-free pool commits nothing and finishes nothing."""
+    state = engine.fresh_state(2)
+    pos0 = np.asarray(state["pos"]).copy()
+    state, res = engine.step_decode(state, jax.random.PRNGKey(0))
+    assert res.done_prev.all()
+    assert (res.chosen == PAD).all()
+    np.testing.assert_array_equal(np.asarray(state["pos"]), pos0)
+
+
+# ----------------------------------------------------------------------
+# Scheduler behaviour
+# ----------------------------------------------------------------------
+
+def test_freed_slot_readmitted_next_step(engine):
+    """A freed slot must pick up the next queued prompt on the very next
+    scheduler step (the continuous-batching acceptance criterion)."""
+    sched = GSIScheduler(engine, capacity=1)
+    first = sched.submit([5, 6, 4], max_steps=1)
+    second = sched.submit([7, 3, 4], max_steps=1)
+    rng = jax.random.PRNGKey(0)
+    rng, k = jax.random.split(rng)
+    done = sched.step(k)
+    assert [r.request_id for r in done] == [first]
+    assert sched.pool.num_free == 1 and len(sched.queue) == 1
+    rng, k = jax.random.split(rng)
+    done = sched.step(k)                      # re-admit + decode, one step
+    assert [r.request_id for r in done] == [second]
+    assert sched.engine_steps == 2
+
+
+def test_scheduler_matches_fixed_run_when_capacity_covers(engine):
+    """With capacity >= #requests the scheduler reproduces engine.run()
+    trajectories exactly (same rng stream, bit-identical admission)."""
+    prompts = np.array([[5, 6, 4], [7, 3, 4]], np.int32)
+    responses, _ = engine.run(prompts, jax.random.PRNGKey(3))
+    sched = GSIScheduler(engine, capacity=2)
+    ids = [sched.submit(p) for p in prompts]
+    out = sched.run(jax.random.PRNGKey(3))
+    for b, rid in enumerate(ids):
+        got = [s.tolist() for s in out[rid].steps]
+        want = [s.tolist() for s in responses[b]]
+        assert got == want
+
+
+def test_out_of_order_completion_assembly(engine):
+    """Responses are keyed by request id even when later submissions
+    finish first and slots are recycled through multiple requests."""
+    sched = GSIScheduler(engine, capacity=2)
+    budgets = {"long": 3, "s1": 1, "s2": 1, "s3": 1}
+    for rid, b in budgets.items():
+        sched.submit([5, 6, 4], request_id=rid, max_steps=b)
+    out = sched.run(jax.random.PRNGKey(7))
+    assert set(out) == set(budgets)
+    for rid, b in budgets.items():
+        assert out[rid].engine_steps == b, rid
+        assert out[rid].finish_reason in ("max_steps", "eos", "low_reward")
+    # short requests time-share one slot while "long" holds the other:
+    # total engine steps < sum of per-request steps (capacity reclaimed)
+    assert sched.engine_steps < sum(budgets.values())
+    assert out["s3"].finished_at >= out["s1"].finished_at
+    assert sched.stats.requests_finished == 4
+
+
+def test_admission_control_rejects_oversized(engine):
+    sched = GSIScheduler(engine, capacity=1)
+    with pytest.raises(ValueError):
+        sched.submit(np.arange(1, 60), max_steps=3)   # needs > max_seq
+    with pytest.raises(ValueError):
+        sched.submit([], max_steps=1)
+
+
+def test_gang_mode_admits_only_into_empty_pool(engine):
+    sched = GSIScheduler(engine, capacity=2, continuous=False)
+    for i, b in enumerate([2, 1, 1]):
+        sched.submit([5, 6, 4], max_steps=b, request_id=f"r{i}")
+    rng = jax.random.PRNGKey(0)
+    rng, k = jax.random.split(rng)
+    done = sched.step(k)                      # r0,r1 admitted; r1 finishes
+    assert [r.request_id for r in done] == ["r1"]
+    assert len(sched.queue) == 1              # r2 must wait for the gang
+    rng, k = jax.random.split(rng)
+    done = sched.step(k)                      # r0 finishes; r2 NOT admitted
+    assert [r.request_id for r in done] == ["r0"]
+    rng, k = jax.random.split(rng)
+    done = sched.step(k)                      # pool empty -> r2 admitted
+    assert [r.request_id for r in done] == ["r2"]
+
+
+def test_arrival_order_beats_submit_order(engine):
+    """An early arrival submitted late must not be head-of-line blocked
+    behind a not-yet-arrived request submitted before it."""
+    sched = GSIScheduler(engine, capacity=1)
+    sched.submit([5, 6, 4], request_id="late", max_steps=1,
+                 arrival_time=30.0)
+    sched.submit([7, 3, 4], request_id="early", max_steps=1,
+                 arrival_time=0.0)
+    assert sched.queue[0].id == "early"
+    done = sched.step(jax.random.PRNGKey(0))
+    assert [r.request_id for r in done] == ["early"]
+    assert sched.pool.num_free == 1 and sched.queue[0].id == "late"
+
+
+def test_run_ignores_all_pad_padding_rows(engine):
+    """engine.run on a partial batch padded with all-PAD rows must treat
+    the padding as already done (no phantom decoding)."""
+    prompts = np.array([[5, 6, 4], [0, 0, 0]], np.int32)
+    responses, stats = engine.run(prompts, jax.random.PRNGKey(3))
+    assert responses[1] == []
+    assert stats.decisions <= stats.steps   # only the one live request
+
+
+def test_repeat_cache_unstacked_layout(tiny_dense):
+    """repeat_cache expands dim 0 for unscanned (rem) cache entries."""
+    from repro.serving import repeat_cache
+    cfg = dataclasses.replace(tiny_dense, scan_layers=False)
+    m = build_model(cfg)
+    cache = m.init_cache(2, 8)
+    rep = repeat_cache(cache, 3)
+    leaves = jax.tree.leaves(rep)
+    assert all(leaf.shape[0] == 6 for leaf in leaves)
