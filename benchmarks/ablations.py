@@ -60,6 +60,9 @@ def table4_chi2(fast: bool = False):
     requests = 6 if fast else 12
     problems = common.sample_problems(requests, seed=7)
     res = common.eval_method("gsi", 4, problems, seed=8)
+    # raw per-step traces are capped at stats.trace_limit (512) arrays;
+    # these runs take <= max_steps << 512 engine steps, so the sample is
+    # complete — longer consumers should use stats.trace_mean/trace_var
     ratios = np.concatenate([r.ravel() for r in res["stats"].logp_ratio])
     chi2 = float(theory.chi2_mc_estimate(jnp.asarray(ratios),
                                          jnp.zeros_like(jnp.asarray(ratios))))

@@ -14,6 +14,7 @@ Tables covered (paper -> module):
     Theorem 1 (C.5)     ablations.py     KL vs bound table
     kernels             kernels_bench.py VMEM-tiling micro numbers
     serving (beyond-paper) throughput.py continuous-batching tokens/s
+    memory (beyond-paper)  throughput.py paged-KV cache-memory report
 """
 from __future__ import annotations
 
@@ -29,7 +30,7 @@ def main() -> None:
                     help="CI smoke: tiny training budgets, implies --fast")
     ap.add_argument("--only", default=None,
                     help="comma list: accuracy,latency,ablations,kernels,"
-                         "throughput")
+                         "throughput,memory")
     args = ap.parse_args()
 
     from benchmarks import common
@@ -59,6 +60,10 @@ def main() -> None:
     if want("throughput"):
         from benchmarks import throughput
         throughput.run(args.fast)
+    if want("memory"):
+        # paged-KV cache-memory report: cheap enough for every CI smoke
+        from benchmarks import throughput
+        throughput.memory_report()
 
     print(f"# total {time.time() - t0:.1f}s, {len(__import__('benchmarks.common', fromlist=['all_rows']).all_rows())} rows",
           flush=True)

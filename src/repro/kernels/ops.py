@@ -54,6 +54,20 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention (serving; gathers K/V through the block table)
+# ---------------------------------------------------------------------------
+
+def paged_attention(q, kp, vp, pt, pos, *, window=0, scale=None):
+    """q: (B,1,H,hd); kp/vp: (P,ps,KV,hd); pt: (B,nblk); pos: (B,)."""
+    if _mode() == "0":
+        return ref.paged_attention_ref(q, kp, vp, pt, pos, window=window,
+                                       scale=scale)
+    from repro.kernels.paged_attention import paged_attention_pallas
+    return paged_attention_pallas(q, kp, vp, pt, pos, window=window,
+                                  scale=scale, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
 # RWKV6 chunked scan
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,109 @@
+"""Paged decode-attention Pallas kernel: gather K/V through the block table.
+
+One query token per request against a paged KV cache.  The page pools stay
+in HBM-resident arrays shaped ``(P, page_size, KV, hd)``; the kernel never
+materializes the gathered ``(B, S, KV, hd)`` copy that the jnp oracle
+builds.  Instead the block table is a *scalar-prefetch* operand
+(``pltpu.PrefetchScalarGridSpec``): the K/V BlockSpec index maps read
+``pt[b, i]`` to DMA exactly the physical page for logical block ``i`` of
+request ``b`` — the gather happens in the grid indexing, not in compute.
+
+Grid: ``(B, H, nblk)`` with the block sweep innermost; online-softmax
+accumulators (m, l, acc) live in VMEM scratch across the sweep, as in
+``flash_attention.py``.  GQA reads kv head ``h // G``.  Validity is the
+absolute-layout decode mask: position ``kpos = i * ps + lane`` is live iff
+``kpos <= pos[b]`` (and ``kpos > pos[b] - window`` for sliding-window
+layers) — stale rows of partially-filled or recycled pages are masked, so
+pages never need zeroing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, window: int, ps: int, nblk: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)          # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (ps, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(k, q[:, None], preferred_element_type=jnp.float32)[:, 0]
+    s = s * scale                                    # (ps,)
+    kpos = i * ps + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)[:, 0]
+    pos = pos_ref[b]
+    mask = kpos <= pos
+    if window:
+        mask &= kpos > pos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_old = m_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[0, :] = acc_ref[0, :] * alpha + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32)[0]
+    m_ref[0] = m_new
+
+    @pl.when(i == nblk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[0, :] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "scale", "interpret"))
+def paged_attention_pallas(q, kp, vp, pt, pos, *, window=0, scale=None,
+                           interpret: bool = False):
+    """q: (B,1,H,hd); kp/vp: (P,ps,KV,hd); pt: (B,nblk); pos: (B,)."""
+    B, _, H, hd = q.shape
+    _, ps, KV, _ = kp.shape
+    G = H // KV
+    nblk = pt.shape[1]
+    if scale is None:
+        scale = hd ** -0.5
+    q3 = q[:, 0]                                     # (B, H, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # pt, pos
+        grid=(B, H, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, i, pt, pos: (b, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, pt, pos, g=G: (pt[b, i], 0,
+                                                        h // g, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, pt, pos, g=G: (pt[b, i], 0,
+                                                        h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, i, pt, pos: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8,), jnp.float32),           # m (row 0 used)
+            pltpu.VMEM((8,), jnp.float32),           # l
+            pltpu.VMEM((8, hd), jnp.float32),        # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, ps=ps,
+                          nblk=nblk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(pt.astype(jnp.int32), pos.astype(jnp.int32), q3, kp, vp)
+    return out[:, None]

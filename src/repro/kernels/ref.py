@@ -43,6 +43,51 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     return out.reshape(B, Sq, H, hd)
 
 
+def paged_attention_ref(q, kp, vp, pt, pos, *, window=0, scale=None):
+    """Paged decode attention: gather K/V through the block table.
+
+    q: (B,1,H,hd) single-token queries; kp/vp: (P,ps,KV,hd) page pools;
+    pt: (B,nblk) int32 block table (logical block j of row b lives in
+    page pt[b,j]); pos: (B,) per-request positions -> (B,1,H,hd).
+
+    Logical layout is *absolute*: cache row j holds position j, so the
+    validity mask is ``j <= pos`` (and ``j > pos - window`` for
+    sliding-window layers).  For full-attention layers this is exactly the
+    dense decode layout, so outputs are bit-identical to the dense path:
+    masked rows contribute exp(-1e30 - m) == 0.0 to the softmax and
+    0.0 * v to the weighted sum regardless of stale page content.
+    """
+    B, _, H, hd = q.shape
+    P, ps, KV, _ = kp.shape
+    nblk = pt.shape[1]
+    S = nblk * ps
+    if scale is None:
+        scale = hd ** -0.5
+    rows = (pt[:, :, None] * ps
+            + jnp.arange(ps)[None, None, :]).reshape(B, S)   # (B, S)
+    k = jnp.take(kp.reshape(P * ps, KV, hd), rows, axis=0)   # (B,S,KV,hd)
+    v = jnp.take(vp.reshape(P * ps, KV, hd), rows, axis=0)
+    slots = jnp.arange(S)[None, :]                           # (1, S)
+    mask = slots <= pos[:, None]
+    if window:
+        mask &= slots > pos[:, None] - window
+    # identical math/order to models.attention.gqa_attention, including
+    # its REPRO_ATTN_SCORES_BF16 score-buffer knob (_score_dtype) — the
+    # bit-identity with the dense path must survive the env switch
+    import os
+    sdt = jnp.bfloat16 if os.environ.get("REPRO_ATTN_SCORES_BF16") == "1" \
+        else jnp.float32
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=sdt) * scale
+    s = s.astype(jnp.float32) \
+        + jnp.where(mask[:, None, None, None, :], 0.0, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(B, 1, H, hd)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state):
     """Sequential WKV6 recurrence.
 

@@ -113,6 +113,12 @@ def main() -> None:
     ap.add_argument("--gang", action="store_true",
                     help="fixed-batch gang scheduling instead of "
                          "continuous batching")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache (page pools + copy-on-write "
+                         "candidate branching) instead of dense rows")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page pool size (0 = dense-equivalent capacity)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -127,13 +133,24 @@ def main() -> None:
                   max_step_tokens=8, max_steps=8)
     capacity = args.capacity or max(1, args.requests // 2)
     engine = GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
-                              mode=args.method, max_seq=128)
+                              mode=args.method, max_seq=128,
+                              paged=args.paged, page_size=args.page_size,
+                              num_pages=args.num_pages)
     problems = [task.sample_problem() for _ in range(args.requests)]
     res = evaluate_queued(engine, task, problems,
                           jax.random.PRNGKey(args.seed + 1),
                           capacity=capacity, continuous=not args.gang)
+    if args.paged:
+        rep = engine.cache_memory_report(capacity)
+        print(f"paged cache: {rep['num_pages']} pages x "
+              f"{rep['bytes_per_page']} B; branch scratch "
+              f"{rep['paged_branch_bytes']>>10} KiB vs dense "
+              f"{rep['dense_branch_bytes']>>10} KiB "
+              f"({rep['branch_reduction']:.1f}x); "
+              f"peak assigned {rep.get('pages_peak', 0)} pages")
     print(f"method={args.method} n={args.n} capacity={capacity} "
-          f"({'gang' if args.gang else 'continuous'}): "
+          f"({'gang' if args.gang else 'continuous'}"
+          f"{', paged' if args.paged else ''}): "
           f"accuracy={res['accuracy']:.3f} "
           f"accept={res['accept_rate']:.2f} steps={res['steps']} "
           f"wall={res['wall_s']:.1f}s tokens/s={res['tokens_per_s']:.1f} "

@@ -105,6 +105,19 @@ def init_self_cache(cfg, kind: str, batch: int, max_seq: int):
     return {"k": z, "v": z}
 
 
+def init_paged_self_cache(cfg, total_pages: int, page_size: int):
+    """Paged cache for one attention layer: K/V page pools, no batch dim.
+
+    Positions are stored *absolutely* (page of position p = block table
+    entry ``p // page_size``) for every layer kind; sliding-window layers
+    trade the dense ring buffer's O(window) rows for page-table sharing
+    and get their locality back through the decode mask instead.
+    """
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    z = jnp.zeros((total_pages, page_size, KV, hd), adtype(cfg))
+    return {"kp": z, "vp": z}
+
+
 def _cache_len(cfg, kind: str, max_seq: int) -> int:
     if kind == "local" or (cfg.serve_window_override and kind in ("full", "cross")):
         w = cfg.window_size if kind == "local" else cfg.serve_window_override
@@ -114,10 +127,12 @@ def _cache_len(cfg, kind: str, max_seq: int) -> int:
 
 def self_attention(cfg, p, x, *, kind: str, mode: str,
                    positions, cache=None, window_override: int = 0,
-                   max_seq: int = 0, causal: bool = True):
+                   max_seq: int = 0, causal: bool = True, pt=None):
     """Returns (out, new_cache).
 
     positions: (S,) for train/prefill (shared across batch); (B,) for decode.
+    ``pt`` (B, nblk) selects the paged decode path when ``cache`` holds
+    page pools ({'kp','vp'}) instead of per-slot dense rows ({'k','v'}).
     """
     B = x.shape[0]
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -143,10 +158,18 @@ def self_attention(cfg, p, x, *, kind: str, mode: str,
         pos_b = positions[:, None]  # (B,1)
         q = apply_rope(q, pos_b, cfg.rope_theta)
         k = apply_rope(k, pos_b, cfg.rope_theta)
-        new_cache = _write_cache(cache, k, v, positions)
-        mask = _decode_mask(new_cache["k"].shape[1], positions,
-                            ring=(window > 0))  # (B,1,Sk)
-        out = gqa_attention(q, new_cache["k"], new_cache["v"], mask, scale)
+        if pt is not None and "kp" in cache:
+            from repro.kernels import ops
+            new_cache = _write_cache_paged(cache, k, v, positions, pt)
+            out = ops.paged_attention(q, new_cache["kp"], new_cache["vp"],
+                                      pt, positions, window=window,
+                                      scale=scale)
+        else:
+            new_cache = _write_cache(cache, k, v, positions)
+            mask = _decode_mask(new_cache["k"].shape[1], positions,
+                                ring=(window > 0))  # (B,1,Sk)
+            out = gqa_attention(q, new_cache["k"], new_cache["v"], mask,
+                                scale)
 
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, new_cache
@@ -179,6 +202,29 @@ def _write_cache(cache, k, v, positions):
     k_new = jax.vmap(upd)(cache["k"], k, slots)
     v_new = jax.vmap(upd)(cache["v"], v, slots)
     return {"k": k_new, "v": v_new}
+
+
+def _write_cache_paged(cache, k, v, positions, pt):
+    """Write the new (B,1,KV,hd) kv through the block table.
+
+    Physical row of position p for request b is
+    ``pt[b, p // ps] * ps + p % ps``.  Rows that are done (or never
+    admitted) resolve to scratch/trash pages the host allocator set up, so
+    the unconditional write stays harmless exactly as in the dense path.
+    """
+    kp, vp = cache["kp"], cache["vp"]
+    P, ps = kp.shape[0], kp.shape[1]
+    blk = jnp.minimum(positions // ps, pt.shape[1] - 1)
+    page = jnp.take_along_axis(pt, blk[:, None], axis=1)[:, 0]
+    rows = page * ps + positions % ps                      # (B,)
+
+    def upd(pool, new):
+        flat = pool.reshape((P * ps,) + pool.shape[2:])
+        return flat.at[rows].set(new[:, 0]).reshape(pool.shape)
+
+    out = dict(cache)
+    out["kp"], out["vp"] = upd(kp, k), upd(vp, v)
+    return out
 
 
 def _decode_mask(sk: int, positions, *, ring: bool):

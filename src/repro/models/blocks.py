@@ -40,13 +40,22 @@ def block_specs(cfg, kind: str):
     return s
 
 
-def init_block_cache(cfg, kind: str, batch: int, max_seq: int):
-    """Zeroed decode cache for one block."""
+def init_block_cache(cfg, kind: str, batch: int, max_seq: int, *,
+                     pages: int = 0, page_size: int = 0):
+    """Zeroed decode cache for one block.
+
+    ``pages > 0`` selects the paged layout for attention KV: page pools
+    shared by all slots instead of per-slot dense rows.  Recurrent/RWKV
+    state and cross-attention KV stay dense per slot (O(1)/write-once).
+    """
     if kind == "rwkv":
         return rwkv.init_rwkv_state(cfg, batch)
     if kind == "recurrent":
         return lru.init_lru_state(cfg, batch)
-    c = attn.init_self_cache(cfg, kind, batch, max_seq)
+    if pages:
+        c = attn.init_paged_self_cache(cfg, pages, page_size)
+    else:
+        c = attn.init_self_cache(cfg, kind, batch, max_seq)
     if kind == "cross":
         src = cfg.encoder_seq or cfg.cross_source_seq
         z = jnp.zeros((batch, src, cfg.num_kv_heads, cfg.head_dim),
@@ -67,7 +76,7 @@ def _freeze(live, new, old):
 
 def block_apply(cfg, kind: str, p, x, *, mode: str, positions,
                 cache=None, source=None, max_seq: int = 0,
-                window_override: int = 0, live=None):
+                window_override: int = 0, live=None, pt=None):
     if kind == "rwkv":
         state = cache if cache is not None else rwkv.init_rwkv_state(
             cfg, x.shape[0])
@@ -91,13 +100,14 @@ def block_apply(cfg, kind: str, p, x, *, mode: str, positions,
     else:
         self_cache = None
         if cache is not None:
-            self_cache = {"k": cache["k"], "v": cache["v"]}
+            self_cache = {k: cache[k] for k in ("k", "v", "kp", "vp")
+                          if k in cache}
         y, new_cache = attn.self_attention(
             cfg, p["attn"], h, kind=("full" if kind in ("cross", "enc")
                                      else kind),
             mode=mode, positions=positions, cache=self_cache,
             window_override=window_override, max_seq=max_seq,
-            causal=(kind != "enc"))
+            causal=(kind != "enc"), pt=pt)
     x = x + y
 
     if kind == "cross":

@@ -98,7 +98,8 @@ class Model:
     # Core stack
     # ------------------------------------------------------------------
     def _run_stack(self, params, x, *, mode, positions, cache=None,
-                   source=None, max_seq=0, window_override=0, live=None):
+                   source=None, max_seq=0, window_override=0, live=None,
+                   pt=None):
         cfg = self.cfg
         aux_total = 0.0
         new_cache = {"blocks": None, "rem": None}
@@ -106,7 +107,7 @@ class Model:
         apply = functools.partial(
             B.block_apply, cfg, mode=mode, positions=positions,
             source=source, max_seq=max_seq, window_override=window_override,
-            live=live)
+            live=live, pt=pt)
 
         if self.repeats:
             def body(carry, xs):
@@ -183,18 +184,19 @@ class Model:
         return logits, cache
 
     def decode_step(self, params, cache, tokens, positions, live=None,
-                    return_hidden: bool = False):
+                    return_hidden: bool = False, pt=None):
         """One serving step: tokens (B,1), positions (B,) -> (logits, cache).
 
         ``live`` (B,) bool freezes recurrent state for finished requests.
         ``return_hidden`` additionally returns the final hidden state (B,d)
-        (used by the PRM reward head in the serving engine).
+        (used by the PRM reward head in the serving engine).  ``pt`` (B,
+        nblk) routes attention layers through the paged KV-cache path.
         """
         cfg = self.cfg
         x = embed_tokens(cfg, params["embed"], tokens)
         x, new_cache, _ = self._run_stack(
             params, x, mode="decode", positions=positions, cache=cache,
-            window_override=cfg.serve_window_override, live=live)
+            window_override=cfg.serve_window_override, live=live, pt=pt)
         logits = unembed(cfg, params["embed"], x)[:, 0]
         if return_hidden:
             return logits, new_cache, x[:, 0]
@@ -207,19 +209,24 @@ class Model:
                  )[..., 0] + rh["b"].astype(jnp.float32)
         return jax.nn.sigmoid(logit)
 
-    def init_cache(self, batch: int, max_seq: int):
+    def init_cache(self, batch: int, max_seq: int, *, pages: int = 0,
+                   page_size: int = 0):
+        """Zeroed cache pytree; ``pages > 0`` selects the paged layout
+        (attention leaves become shared page pools, see serving/pages.py)."""
         cfg = self.cfg
         cache = {"blocks": None, "rem": None}
+        kw = dict(pages=pages, page_size=page_size)
         if self.repeats:
             def stack_zero(kind):
-                one = B.init_block_cache(cfg, kind, batch, max_seq)
+                one = B.init_block_cache(cfg, kind, batch, max_seq, **kw)
                 return jax.tree.map(
                     lambda a: jnp.broadcast_to(
                         a[None], (self.repeats,) + a.shape), one)
             cache["blocks"] = {f"p{i}": stack_zero(k)
                                for i, k in enumerate(self.pattern)}
         if self.remainder:
-            cache["rem"] = {f"r{i}": B.init_block_cache(cfg, k, batch, max_seq)
+            cache["rem"] = {f"r{i}": B.init_block_cache(cfg, k, batch,
+                                                        max_seq, **kw)
                             for i, k in enumerate(self.remainder)}
         return cache
 

@@ -58,7 +58,7 @@ def sample_token(rng, logits, temperature: float = 1.0, top_p: float = 1.0):
 def sample_steps(model, params, cache, last_token, positions, rng, *,
                  max_tokens: int, sep_token: int, eos_token: int,
                  temperature: float = 0.7, top_p: float = 1.0,
-                 already_done=None) -> StepBatch:
+                 already_done=None, pt=None) -> StepBatch:
     """Sample one reasoning step per request.
 
     last_token/positions: (B,) — the last committed token and its position.
@@ -73,7 +73,7 @@ def sample_steps(model, params, cache, last_token, positions, rng, *,
     def body(carry, rng_t):
         cache, tok, pos, done, lp = carry
         logits, cache = model.decode_step(params, cache, tok[:, None], pos,
-                                          live=~done)
+                                          live=~done, pt=pt)
         nxt = sample_token(rng_t, logits, temperature, top_p)
         logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
         logp_tok = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
@@ -98,7 +98,7 @@ def sample_steps(model, params, cache, last_token, positions, rng, *,
 
 def score_and_append(model, params, cache, last_token, positions,
                      step_tokens, *, return_rewards: bool = False,
-                     row_live=None):
+                     row_live=None, pt=None):
     """Teacher-force ``step_tokens`` (B,L; PAD-padded) through the model.
 
     Returns (logprob (B,), new_cache, new_positions[, rewards (B,)]).
@@ -119,7 +119,7 @@ def score_and_append(model, params, cache, last_token, positions,
         if row_live is not None:
             live = live & row_live
         out = model.decode_step(params, cache, tok[:, None], pos, live=live,
-                                return_hidden=return_rewards)
+                                return_hidden=return_rewards, pt=pt)
         if return_rewards:
             logits, cache, hidden = out
             # reward head evaluated on the token *fed* this iteration;

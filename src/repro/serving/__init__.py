@@ -1,8 +1,10 @@
-from repro.serving.engine import (repeat_cache, reset_cache_rows,  # noqa: F401
-                                  take_candidates)
+from repro.serving.engine import (branch_cache, branch_pages,  # noqa: F401
+                                  paged_view, repeat_cache,
+                                  reset_cache_rows, take_candidates)
 from repro.serving.gsi_engine import (GSIServingEngine, EngineStats,  # noqa: F401
                                       StepResult)
 from repro.serving.latency import LatencyModel, HW_V5E  # noqa: F401
+from repro.serving.pages import PagePool, pages_for  # noqa: F401
 from repro.serving.scheduler import (GSIScheduler, Request,  # noqa: F401
                                      Response)
 from repro.serving.slots import SlotPool, pack_prompts  # noqa: F401

@@ -5,16 +5,34 @@ candidate).  Caches store the batch dim at position 0 (unstacked ``rem``
 entries) or 1 (scan-stacked ``blocks`` entries); ``repeat_cache`` handles
 both via path inspection, producing (B*n, ...) scratch caches laid out so
 that row b*n+j is candidate j of request b.
+
+In the *paged* layout, attention leaves are page pools ({'kp','vp'},
+no batch dim) addressed through a per-slot block table, and candidate
+branching is copy-on-write instead of dense duplication: ``branch_pages``
+forks the table so the n branches alias the committed prefix's pages and
+point their write range at statically reserved scratch pages, and
+``branch_cache`` copies only the one partial page each branch will extend
+— O(n * pages_per_step) pages instead of O(n * max_seq) rows.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+_PAGED_KEYS = ("kp", "vp")
+
 
 def _batch_dim(path, stacked_key: str = "blocks") -> int:
     return 1 if any(getattr(p, "key", None) == stacked_key for p in path) \
         else 0
+
+
+def _is_paged(path) -> bool:
+    return any(getattr(p, "key", None) in _PAGED_KEYS for p in path)
+
+
+def _is_stacked(path, stacked_key: str = "blocks") -> bool:
+    return any(getattr(p, "key", None) == stacked_key for p in path)
 
 
 def repeat_cache(cache, n: int, stacked_key: str = "blocks"):
@@ -31,15 +49,109 @@ def reset_cache_rows(cache, reset_mask, stacked_key: str = "blocks"):
     Used by the slot pool when a freed slot is re-admitted with a new
     prompt: attention KV beyond the reset ``pos`` is already masked out by
     the decode mask, but recurrent/RWKV state (and ring buffers) carry the
-    previous occupant, so the whole row is cleared before prefill.
+    previous occupant, so the whole row is cleared before prefill.  Paged
+    pools ({'kp','vp'}) are shared across slots and never need zeroing —
+    a page is always written before the decode mask can expose it.
     """
     def zero(path, leaf):
+        if _is_paged(path):
+            return leaf
         d = _batch_dim(path, stacked_key)
         shape = [1] * leaf.ndim
         shape[d] = reset_mask.shape[0]
         m = reset_mask.reshape(shape)
         return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
     return jax.tree_util.tree_map_with_path(zero, cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged copy-on-write candidate branching
+# ---------------------------------------------------------------------------
+
+def branch_pages(pt, pos, scratch_ids, page_size: int):
+    """Fork the committed block table for n candidate branches.
+
+    pt: (B, nblk1) committed table (last column is the trash block);
+    pos: (B,); scratch_ids: (B, n, span) static scratch page ids.
+    Returns the (B*n, nblk1) branch table: entries below the write block
+    ``pos // page_size`` alias the committed prefix's pages; the ``span``
+    entries from the write block on point at the branch's scratch pages
+    (clamped into the trash column past the table end, where writes are
+    discardable by construction).
+    """
+    B, n, span = scratch_ids.shape
+    nblk1 = pt.shape[1]
+    bpt = jnp.repeat(pt, n, axis=0)                       # (B*n, nblk1)
+    blk0 = jnp.repeat(pos // page_size, n)                # (B*n,)
+    rows = jnp.repeat(jnp.arange(B * n)[:, None], span, axis=1)
+    cols = jnp.minimum(blk0[:, None] + jnp.arange(span)[None, :], nblk1 - 1)
+    return bpt.at[rows, cols].set(scratch_ids.reshape(B * n, span))
+
+
+def branch_cache(cache, n: int, pt, pos, scratch_ids, page_size: int,
+                 stacked_key: str = "blocks"):
+    """Copy-on-write analogue of ``repeat_cache`` for a paged cache.
+
+    Paged pool leaves stay shared (aliased); only the partial page at the
+    branch point is copied — each branch's first scratch page receives the
+    content of the committed page holding ``pos``, so in-page committed
+    rows below ``pos`` stay visible while branch writes land in scratch.
+    Dense per-slot leaves (recurrent/RWKV state, cross KV) repeat as in
+    the dense engine.
+    """
+    B = scratch_ids.shape[0]
+    assert scratch_ids.shape[1] == n
+    src = jnp.take_along_axis(pt, (pos // page_size)[:, None], axis=1)[:, 0]
+    src = jnp.repeat(src, n)                              # (B*n,)
+    dst = scratch_ids[:, :, 0].reshape(B * n)             # first scratch page
+
+    def cow(path, leaf):
+        if not _is_paged(path):
+            d = _batch_dim(path, stacked_key)
+            return jnp.repeat(leaf, n, axis=d)
+        if _is_stacked(path, stacked_key):                # (reps, P, ps, ...)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])                # (P, ps, ...)
+
+    return jax.tree_util.tree_map_with_path(cow, cache)
+
+
+def paged_view(cache, pt, stacked_key: str = "blocks"):
+    """Materialize the dense per-slot view of a paged cache.
+
+    Gathers each pool leaf through the block table into the (B, S, KV, hd)
+    layout the dense/score paths expect (S = nblk * page_size, absolute
+    positions).  Used by the shared-prefix scoring path and by tests; the
+    hot decode path never builds this — it reads through
+    ``kernels.ops.paged_attention`` instead.
+    """
+    nblk = pt.shape[1]
+
+    def gather(pool):                                     # (P, ps, KV, hd)
+        P, ps = pool.shape[0], pool.shape[1]
+        rows = (pt[:, :, None] * ps
+                + jnp.arange(ps)[None, None, :]).reshape(pt.shape[0],
+                                                         nblk * ps)
+        flat = pool.reshape((P * ps,) + pool.shape[2:])
+        return jnp.take(flat, rows, axis=0)
+
+    def walk(node, stacked):
+        if isinstance(node, dict) and "kp" in node:
+            out = {k: v for k, v in node.items()
+                   if k not in _PAGED_KEYS}
+            if stacked:
+                out["k"] = jax.vmap(gather)(node["kp"])
+                out["v"] = jax.vmap(gather)(node["vp"])
+            else:
+                out["k"] = gather(node["kp"])
+                out["v"] = gather(node["vp"])
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v, stacked or k == stacked_key)
+                    for k, v in node.items()}
+        return node
+
+    return walk(cache, False)
 
 
 def expand_requests(x, n: int):

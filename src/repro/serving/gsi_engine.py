@@ -30,9 +30,11 @@ from repro.config import GSIConfig, ModelConfig
 from repro.core import gsi_select, rsd_select, soft_bon_select
 from repro.models import build_model
 from repro.sampling import sample_steps, score_and_append
-from repro.serving.engine import (expand_requests, fold_candidates,
-                                  repeat_cache, reset_cache_rows,
+from repro.serving.engine import (branch_cache, branch_pages,
+                                  expand_requests, fold_candidates,
+                                  paged_view, repeat_cache, reset_cache_rows,
                                   take_candidates, take_per_request)
+from repro.serving.pages import PagePool, pages_for
 
 PAD = 0
 
@@ -54,13 +56,51 @@ class EngineStats:
     draft_tokens: int = 0
     target_tokens: int = 0
     requests_finished: int = 0
+    # per-step trace arrays are bounded: at most ``trace_limit`` arrays are
+    # retained per trace, while running moments keep exact aggregate
+    # mean/variance for arbitrarily long serving runs (collect_stats=True
+    # under the scheduler must not grow memory without limit).
+    trace_limit: int = 512
     tilted_rewards: list = field(default_factory=list)
     raw_rewards: list = field(default_factory=list)
     logp_ratio: list = field(default_factory=list)   # log pi_B - log pi_S
+    moments: dict = field(default_factory=dict)      # name -> [n, mean, M2]
 
     @property
     def accept_rate(self) -> float:
         return self.accepted / max(1, self.decisions)
+
+    def record_trace(self, name: str, arr) -> None:
+        """Append ``arr`` to the named trace (bounded) and fold it into
+        the running moments (unbounded-safe Chan/Welford merge)."""
+        arr = np.asarray(arr)
+        lst = getattr(self, name)
+        if len(lst) < self.trace_limit:
+            lst.append(arr)
+        x = arr.astype(np.float64).ravel()
+        if x.size == 0:
+            return
+        n_a, mean_a, m2_a = self.moments.setdefault(name, [0, 0.0, 0.0])
+        n_b = x.size
+        mean_b = float(x.mean())
+        m2_b = float(((x - mean_b) ** 2).sum())
+        n = n_a + n_b
+        delta = mean_b - mean_a
+        self.moments[name] = [
+            n,
+            mean_a + delta * n_b / n,
+            m2_a + m2_b + delta * delta * n_a * n_b / n,
+        ]
+
+    def trace_mean(self, name: str) -> float:
+        return self.moments.get(name, [0, 0.0, 0.0])[1]
+
+    def trace_var(self, name: str) -> float:
+        n, _, m2 = self.moments.get(name, [0, 0.0, 0.0])
+        return m2 / n if n else 0.0
+
+    def trace_count(self, name: str) -> int:
+        return self.moments.get(name, [0, 0.0, 0.0])[0]
 
 
 class GSIServingEngine:
@@ -70,7 +110,8 @@ class GSIServingEngine:
                  prm_cfg: ModelConfig, params_s, params_b, params_p,
                  gcfg: GSIConfig, *, mode: str = "gsi",
                  rsd_threshold: float = 0.7, max_seq: int = 512,
-                 shared_scoring: bool = False):
+                 shared_scoring: bool = False, paged: bool = False,
+                 page_size: int = 16, num_pages: int = 0):
         assert prm_cfg.reward_head
         self.mode = mode
         self.gcfg = gcfg
@@ -79,6 +120,24 @@ class GSIServingEngine:
         # beyond-paper: score candidates against ONE shared cache instead of
         # n scratch copies (models/scoring.py); identical math, far less HBM.
         self.shared_scoring = shared_scoring
+        # paged KV-cache: page pools + per-slot block table instead of dense
+        # (B, max_seq) rows; candidate branching is copy-on-write page-table
+        # aliasing (serving/engine.py) and slots draw pages from a host-side
+        # allocator (serving/pages.py).  num_pages=0 sizes the pool to the
+        # dense capacity (batch * nblk) at state creation.
+        self.paged = paged
+        self.page_size = page_size
+        self.nblk = -(-max_seq // page_size)
+        self.nmax = max(gcfg.n, gcfg.n_target or gcfg.n)
+        # pages a single candidate branch can write in one reasoning step:
+        # positions pos .. pos+max_step_tokens, worst-case page phase
+        self.span = (page_size - 1 + gcfg.max_step_tokens) // page_size + 1
+        self._num_pages = num_pages
+        self.num_pages = 0            # set when a paged state is created
+        self.pager: Optional[PagePool] = None
+        self._trash = 0               # trash page id (last pool row)
+        self._released: set = set()   # slots whose pt rows await trash-reset
+        self._gen = 0                 # live-state generation (see fresh_state)
         self.draft = build_model(draft_cfg)
         self.target = build_model(target_cfg)
         self.prm = build_model(prm_cfg)
@@ -91,22 +150,56 @@ class GSIServingEngine:
     # ------------------------------------------------------------------
     # State
     # ------------------------------------------------------------------
-    def _fresh_caches(self, batch: int):
+    def _fresh_caches(self, batch: int, *, pages: int = 0):
+        kw = dict(pages=pages, page_size=self.page_size) if pages else {}
         return {
-            "S": self.draft.init_cache(batch, self.max_seq),
-            "B": self.target.init_cache(batch, self.max_seq),
-            "P": self.prm.init_cache(batch, self.max_seq),
+            "S": self.draft.init_cache(batch, self.max_seq, **kw),
+            "B": self.target.init_cache(batch, self.max_seq, **kw),
+            "P": self.prm.init_cache(batch, self.max_seq, **kw),
         }
 
     def fresh_state(self, batch: int):
         """An all-free slot-pool state: every row is done/inert until a
         prompt is admitted into it (scheduler API)."""
-        return {
-            "caches": self._fresh_caches(batch),
+        state = {
             "pending": jnp.full((batch,), PAD, jnp.int32),
             "pos": jnp.zeros((batch,), jnp.int32),
             "done": jnp.ones((batch,), bool),
         }
+        if not self.paged:
+            state["caches"] = self._fresh_caches(batch)
+            return state
+        # paged layout: `num_pages` allocatable pages + a static scratch
+        # region for copy-on-write branching + one trash page that absorbs
+        # the benign garbage-at-pos writes of done/never-admitted rows.
+        self.num_pages = self._num_pages or batch * self.nblk
+        n_scratch = batch * self.nmax * self.span
+        total = self.num_pages + n_scratch + 1
+        self.pager = PagePool(self.num_pages, self.page_size)
+        self._trash = total - 1
+        self._released = set()
+        scratch = (self.num_pages
+                   + np.arange(n_scratch, dtype=np.int32)
+                   ).reshape(batch, self.nmax, self.span)
+        state["caches"] = self._fresh_caches(batch, pages=total)
+        # block table: one extra (trash) column absorbs clamped writes at
+        # pos == max_seq; unassigned entries also point at the trash page
+        state["pt"] = jnp.full((batch, self.nblk + 1), total - 1, jnp.int32)
+        state["scratch"] = jnp.asarray(scratch)
+        # the page allocator is engine-held host state, so a paged engine
+        # backs ONE live state at a time: creating a new state invalidates
+        # every older one (stepping a stale state raises, see _check_gen)
+        self._gen += 1
+        state["gen"] = jnp.asarray(self._gen, jnp.int32)
+        return state
+
+    def _check_gen(self, state):
+        if int(state["gen"]) != self._gen:
+            raise RuntimeError(
+                "stale paged state: fresh_state()/init_state() was called "
+                "on this engine after the state was created, resetting the "
+                "page allocator.  A paged engine backs one live state at a "
+                "time; build a separate engine for concurrent states.")
 
     def init_state(self, prompts: np.ndarray):
         """prompts: (B, Lp) PAD-padded token array.
@@ -115,16 +208,164 @@ class GSIServingEngine:
         so they never decode or hold up ``run``'s all-done early exit.
         """
         B = prompts.shape[0]
-        state = {
-            "caches": self._fresh_caches(B),
-            "pending": jnp.asarray(prompts[:, 0], jnp.int32),
-            "pos": jnp.zeros((B,), jnp.int32),
-            "done": jnp.asarray((np.asarray(prompts) == PAD).all(axis=1)),
-        }
+        prompts = np.asarray(prompts)
+        state = self.fresh_state(B)
+        state["pending"] = jnp.asarray(prompts[:, 0], jnp.int32)
+        state["done"] = jnp.asarray((prompts == PAD).all(axis=1))
+        if self.paged:
+            lengths = (prompts != PAD).sum(axis=1)
+            for b in range(B):
+                if lengths[b]:
+                    self.pager.claim(b, self.blocks_needed(
+                        int(lengths[b]), self.gcfg.max_steps))
+            state = self._assign_pages(state,
+                                       np.maximum(lengths - 1, 0))
         if prompts.shape[1] > 1:
             state = self._jit_commit(state, jnp.asarray(prompts[:, 1:],
                                                         jnp.int32))
         return state
+
+    # ------------------------------------------------------------------
+    # Page accounting (host side; no-ops for the dense engine)
+    # ------------------------------------------------------------------
+    def positions_needed(self, prompt_len: int, budget: int) -> int:
+        """Worst-case cache positions a request can touch: committed
+        prompt + ``budget`` full reasoning steps.  The single source of
+        the cost model — scheduler admission (max_seq check) and page
+        reservation both derive from it."""
+        return prompt_len - 1 + budget * self.gcfg.max_step_tokens
+
+    def blocks_needed(self, prompt_len: int, budget: int) -> int:
+        """Worst-case pages a request can touch (admission reservation)."""
+        # +1 position: the trailing garbage-at-pos write of the last commit
+        need = self.positions_needed(prompt_len, budget) + 1
+        return min(self.nblk, pages_for(need, self.page_size))
+
+    def admit_ok(self, prompt_len: int, budget: int) -> bool:
+        """Can a request be admitted now?  Paged engines gate on free
+        (unclaimed) pages — False means back-pressure, defer the request."""
+        if not self.paged or self.pager is None:
+            return True
+        return self.pager.can_claim(self.blocks_needed(prompt_len, budget))
+
+    def claim_slot(self, slot: int, prompt_len: int, budget: int) -> None:
+        if self.paged:
+            self.pager.claim(slot, self.blocks_needed(prompt_len, budget))
+
+    def release_slot(self, slot: int) -> int:
+        """Return a finished request's pages to the pool (no zeroing).
+
+        The slot's block-table row is lazily re-pointed at the trash page
+        before the next jitted phase, so the freed slot's benign
+        garbage-at-``pos`` writes can never land in a reassigned page.
+        """
+        if self.paged and slot in self.pager.assigned:
+            self._released.add(slot)
+            return self.pager.release(slot)
+        return 0
+
+    def _flush_released(self, state):
+        """Point released slots' table rows at the trash page."""
+        if not self._released:
+            return state
+        rows = np.asarray(sorted(self._released))
+        self._released = set()
+        state = dict(state)
+        state["pt"] = state["pt"].at[rows].set(self._trash)
+        return state
+
+    def cache_memory_report(self, batch: int) -> dict:
+        """HBM accounting: dense per-slot caches vs the paged pool, and —
+        the headline number — per-draft-step candidate-branch scratch
+        (dense ``repeat_cache`` materializes n full cache copies; paged
+        branching allocates ``n * span`` copy-on-write pages per slot)."""
+        from repro.models.attention import _cache_len
+        from repro.models.common import adtype
+        g = self.gcfg
+
+        def attn_layers(model):
+            kinds = list(model.pattern) * model.repeats \
+                + list(model.remainder)
+            return [k for k in kinds if k not in ("rwkv", "recurrent")]
+
+        def row_bytes(model):
+            """Bytes per cache position (k+v over attention layers)."""
+            cfg = model.cfg
+            item = jnp.dtype(adtype(cfg)).itemsize
+            return sum(2 * cfg.num_kv_heads * cfg.head_dim * item
+                       for _ in attn_layers(model))
+
+        def dense_bytes(model):
+            cfg = model.cfg
+            item = jnp.dtype(adtype(cfg)).itemsize
+            return batch * sum(
+                2 * cfg.num_kv_heads * cfg.head_dim * item
+                * _cache_len(cfg, k, self.max_seq)
+                for k in attn_layers(model))
+
+        n = g.n
+        branched = [self.draft, self.prm]
+        if self.mode in ("gsi", "gsi_norej") and not self.shared_scoring:
+            branched.append(self.target)
+        dense_branch = n * sum(dense_bytes(m) for m in branched)
+        per_row = sum(row_bytes(m)
+                      for m in (self.draft, self.target, self.prm))
+        page_b = per_row * self.page_size
+        num_pages = self.num_pages or batch * self.nblk
+        n_scratch = batch * self.nmax * self.span
+        rep = {
+            "page_size": self.page_size,
+            "num_pages": num_pages,
+            "scratch_pages": n_scratch,
+            "bytes_per_page": page_b,
+            "dense_committed_bytes": sum(
+                dense_bytes(m)
+                for m in (self.draft, self.target, self.prm)),
+            "dense_branch_bytes": dense_branch,
+            "paged_pool_bytes": (num_pages + n_scratch + 1) * page_b,
+            "paged_branch_bytes": n_scratch * page_b,
+        }
+        rep["branch_reduction"] = (
+            rep["dense_branch_bytes"] / max(1, rep["paged_branch_bytes"]))
+        if self.pager is not None:
+            rep["pages_assigned"] = self.pager.num_assigned
+            rep["pages_peak"] = self.pager.peak_assigned
+            rep["paged_assigned_bytes"] = self.pager.num_assigned * page_b
+            rep["paged_peak_bytes"] = self.pager.peak_assigned * page_b
+        return rep
+
+    def _ensure_blocks(self, state, wants: dict):
+        """Assign pages so each slot covers ``wants[slot]`` table blocks,
+        then push the new (block -> page) entries into the device table."""
+        rows, cols, vals = [], [], []
+        for slot, nb in wants.items():
+            for blk, page in self.pager.ensure(slot, nb):
+                rows.append(slot)
+                cols.append(blk)
+                vals.append(page)
+        if rows:
+            state = dict(state)
+            state["pt"] = state["pt"].at[
+                np.asarray(rows), np.asarray(cols)].set(
+                jnp.asarray(np.asarray(vals, np.int32)))
+        return state
+
+    def _assign_pages(self, state, ahead):
+        """Lazily assign pages so every live slot's table covers the blocks
+        the next jitted phase may write (up to ``pos + ahead``)."""
+        state = self._flush_released(state)
+        pos = np.asarray(state["pos"])
+        done = np.asarray(state["done"])
+        ahead = np.broadcast_to(np.asarray(ahead), pos.shape)
+        wants = {}
+        for slot in list(self.pager.assigned):
+            if done[slot] and self.pager.blocks_assigned(slot):
+                continue          # pos is frozen; blocks already cover it
+            wants[slot] = min(
+                self.nblk,
+                pages_for(int(pos[slot]) + int(ahead[slot]) + 1,
+                          self.page_size))
+        return self._ensure_blocks(state, wants)
 
     # ------------------------------------------------------------------
     # Jitted phases
@@ -133,16 +374,17 @@ class GSIServingEngine:
         """Append step_tokens (B,L) to the three committed caches."""
         ps, pb, pp = self.params
         caches = state["caches"]
+        pt = state.get("pt")
         new = {}
         _, new["S"], pos = score_and_append(
             self.draft, ps, caches["S"], state["pending"], state["pos"],
-            step_tokens, row_live=row_live)
+            step_tokens, row_live=row_live, pt=pt)
         _, new["B"], _ = score_and_append(
             self.target, pb, caches["B"], state["pending"], state["pos"],
-            step_tokens, row_live=row_live)
+            step_tokens, row_live=row_live, pt=pt)
         _, new["P"], _, _ = score_and_append(
             self.prm, pp, caches["P"], state["pending"], state["pos"],
-            step_tokens, return_rewards=True, row_live=row_live)
+            step_tokens, return_rewards=True, row_live=row_live, pt=pt)
         length = jnp.sum(step_tokens != PAD, axis=1)
         if row_live is not None:
             length = jnp.where(row_live, length, 0)
@@ -152,8 +394,12 @@ class GSIServingEngine:
                 step_tokens, jnp.maximum(length - 1, 0)[:, None],
                 axis=1)[:, 0],
             state["pending"])
-        return {"caches": new, "pending": pending, "pos": pos,
-                "done": state["done"]}
+        out = {"caches": new, "pending": pending, "pos": pos,
+               "done": state["done"]}
+        if pt is not None:
+            out["pt"], out["scratch"] = pt, state["scratch"]
+            out["gen"] = state["gen"]
+        return out
 
     def _admit(self, state, admit_mask, prompts):
         """Prefill prompts (B,Lp; PAD-padded) into the slots where
@@ -166,14 +412,27 @@ class GSIServingEngine:
         path with ``row_live`` masking.
         """
         caches = reset_cache_rows(state["caches"], admit_mask)
-        state = {
+        new = {
             "caches": caches,
             "pending": jnp.where(admit_mask, prompts[:, 0],
                                  state["pending"]),
             "pos": jnp.where(admit_mask, 0, state["pos"]),
             "done": jnp.where(admit_mask, False, state["done"]),
         }
-        return self._commit(state, prompts[:, 1:], row_live=admit_mask)
+        if "pt" in state:
+            new["pt"], new["scratch"] = state["pt"], state["scratch"]
+            new["gen"] = state["gen"]
+        return self._commit(new, prompts[:, 1:], row_live=admit_mask)
+
+    def _branch(self, cache, n, state):
+        """n scratch branches of a committed cache: dense n-way copy, or
+        paged copy-on-write aliasing.  Returns (cache, branch_pt)."""
+        if not self.paged:
+            return repeat_cache(cache, n), None
+        scr = state["scratch"][:, :n]
+        bpt = branch_pages(state["pt"], state["pos"], scr, self.page_size)
+        return branch_cache(cache, n, state["pt"], state["pos"], scr,
+                            self.page_size), bpt
 
     def _draft_phase(self, state, rng):
         """Sample n draft candidates; score with target + PRM."""
@@ -185,25 +444,28 @@ class GSIServingEngine:
         pos = expand_requests(state["pos"], n)
         done = expand_requests(state["done"], n)
 
-        scratch_s = repeat_cache(state["caches"]["S"], n)
+        scratch_s, bpt = self._branch(state["caches"]["S"], n, state)
         steps = sample_steps(
             self.draft, ps, scratch_s, pend, pos, k1,
             max_tokens=g.max_step_tokens, sep_token=g.sep_token_id,
             eos_token=g.eos_token_id, temperature=g.temperature,
-            top_p=g.top_p, already_done=done)
+            top_p=g.top_p, already_done=done, pt=bpt)
 
         cands = fold_candidates(steps.tokens, n)             # (B,n,L)
         # PRM rewards (always needed)
         if self.shared_scoring:
             from repro.models.scoring import score_candidates
+            cache_p = state["caches"]["P"]
+            if self.paged:
+                cache_p = paged_view(cache_p, state["pt"])
             _, rewards = score_candidates(
-                self.prm, pp, state["caches"]["P"], state["pending"],
+                self.prm, pp, cache_p, state["pending"],
                 state["pos"], cands, return_rewards=True)
         else:
-            scratch_p = repeat_cache(state["caches"]["P"], n)
+            scratch_p, _ = self._branch(state["caches"]["P"], n, state)
             _, _, _, rewards_flat = score_and_append(
                 self.prm, pp, scratch_p, pend, pos, steps.tokens,
-                return_rewards=True)
+                return_rewards=True, pt=bpt)
             rewards = fold_candidates(rewards_flat, n)
 
         out = {
@@ -215,13 +477,17 @@ class GSIServingEngine:
         if self.mode in ("gsi", "gsi_norej"):
             if self.shared_scoring:
                 from repro.models.scoring import score_candidates
+                cache_b = state["caches"]["B"]
+                if self.paged:
+                    cache_b = paged_view(cache_b, state["pt"])
                 out["logp_B"] = score_candidates(
-                    self.target, pb, state["caches"]["B"],
+                    self.target, pb, cache_b,
                     state["pending"], state["pos"], cands)
             else:
-                scratch_b = repeat_cache(state["caches"]["B"], n)
+                scratch_b, _ = self._branch(state["caches"]["B"], n, state)
                 logp_B, _, _ = score_and_append(
-                    self.target, pb, scratch_b, pend, pos, steps.tokens)
+                    self.target, pb, scratch_b, pend, pos, steps.tokens,
+                    pt=bpt)
                 out["logp_B"] = fold_candidates(logp_B, n)
             dec = gsi_select(k2, out["rewards"], out["logp_B"],
                              out["logp_S"], beta=g.beta,
@@ -254,20 +520,20 @@ class GSIServingEngine:
         pos = expand_requests(state["pos"], n)
         done = expand_requests(state["done"], n)
 
-        scratch_b = repeat_cache(state["caches"]["B"], n)
+        scratch_b, bpt = self._branch(state["caches"]["B"], n, state)
         steps = sample_steps(
             self.target, pb, scratch_b, pend, pos, k1,
             max_tokens=g.max_step_tokens, sep_token=g.sep_token_id,
             eos_token=g.eos_token_id, temperature=g.temperature,
-            top_p=g.top_p, already_done=done)
-        scratch_p = repeat_cache(state["caches"]["P"], n)
+            top_p=g.top_p, already_done=done, pt=bpt)
+        scratch_p, _ = self._branch(state["caches"]["P"], n, state)
         _, _, _, rewards = score_and_append(
             self.prm, pp, scratch_p, pend, pos, steps.tokens,
-            return_rewards=True)
+            return_rewards=True, pt=bpt)
         cands = fold_candidates(steps.tokens, n)
         r = fold_candidates(rewards, n)
         idx = soft_bon_select(k2, r, g.beta)
-        return {"chosen": take_candidates(cands, idx),
+        return {"chosen": take_candidates(cands, idx), "cands": cands,
                 "rewards": r, "selected": take_per_request(r, idx)}
 
     # ------------------------------------------------------------------
@@ -288,6 +554,10 @@ class GSIServingEngine:
         B = int(state["done"].shape[0])
         if rng_target is None:
             rng, rng_target = jax.random.split(rng)
+        if self.paged:
+            self._check_gen(state)
+            # lazily page in the blocks this step's commit may write
+            state = self._assign_pages(state, g.max_step_tokens)
         if self.mode == "sbon_b":
             tp = self._jit_target_phase(state, rng)
             chosen = tp["chosen"]
@@ -295,7 +565,7 @@ class GSIServingEngine:
             max_r = np.asarray(jnp.max(tp["rewards"], -1))
             if stats is not None:
                 stats.target_tokens += int(
-                    np.sum(np.asarray(chosen) != PAD)) * g.n
+                    np.sum(np.asarray(tp["cands"]) != PAD))
         else:
             dp = self._jit_draft_phase(state, rng)
             accept = np.asarray(dp["accept"])
@@ -305,18 +575,21 @@ class GSIServingEngine:
                 stats.draft_tokens += int(
                     np.sum(np.asarray(dp["cands"]) != PAD))
                 if collect_stats:
-                    stats.raw_rewards.append(np.asarray(dp["rewards"]))
+                    stats.record_trace("raw_rewards",
+                                       np.asarray(dp["rewards"]))
                     if "logp_B" in dp:
-                        stats.logp_ratio.append(
+                        stats.record_trace(
+                            "logp_ratio",
                             np.asarray(dp["logp_B"] - dp["logp_S"]))
-                        stats.tilted_rewards.append(np.asarray(dp["tilted"]))
+                        stats.record_trace("tilted_rewards",
+                                           np.asarray(dp["tilted"]))
             if not accept.all():
                 tp = self._jit_target_phase(state, rng_target)
                 chosen = jnp.where(jnp.asarray(accept)[:, None],
                                    chosen, tp["chosen"])
                 if stats is not None:
                     stats.target_tokens += int(
-                        np.sum(np.asarray(tp["chosen"]) != PAD)) * g.n
+                        np.sum(np.asarray(tp["cands"]) != PAD))
             if stats is not None:
                 live = ~np.asarray(state["done"])
                 stats.decisions += int(live.sum())
@@ -337,8 +610,26 @@ class GSIServingEngine:
 
     def admit(self, state, admit_mask: np.ndarray, prompts: np.ndarray):
         """Scheduler API: prefill ``prompts`` (B,Lp) into masked slots."""
-        return self._jit_admit(state, jnp.asarray(admit_mask, bool),
-                               jnp.asarray(prompts, jnp.int32))
+        admit_mask = np.asarray(admit_mask, bool)
+        prompts = np.asarray(prompts, np.int32)
+        if self.paged:
+            self._check_gen(state)
+            state = self._flush_released(state)
+            lengths = (prompts != PAD).sum(axis=1)
+            wants = {}
+            for slot in np.nonzero(admit_mask)[0]:
+                slot = int(slot)
+                if slot not in self.pager.assigned:
+                    # direct engine use (no scheduler claim): worst case
+                    self.claim_slot(slot, int(lengths[slot]),
+                                    self.gcfg.max_steps)
+                # prompt prefill writes positions 0 .. Lp-1
+                wants[slot] = min(self.nblk,
+                                  pages_for(max(int(lengths[slot]), 1),
+                                            self.page_size))
+            state = self._ensure_blocks(state, wants)
+        return self._jit_admit(state, jnp.asarray(admit_mask),
+                               jnp.asarray(prompts))
 
     def run(self, prompts: np.ndarray, rng, *,
             collect_stats: bool = True):

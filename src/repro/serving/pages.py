@@ -1,0 +1,124 @@
+"""Host-side page allocator for the paged KV-cache (generalizes SlotPool).
+
+The paged serving state replaces the per-slot dense ``(B, max_seq, KV, hd)``
+caches with fixed page pools — per model and per attention layer a
+``(num_pages + scratch + 1, page_size, KV, hd)`` K/V array — plus ONE
+per-slot block table ``pt: (B, nblk + 1) int32`` shared by all three models
+(draft / target / PRM advance ``pos`` in lockstep, so page ``p`` is row ``p``
+of every attention-layer pool simultaneously).  :class:`PagePool` is the
+host-side ledger over the ``num_pages`` allocatable ids:
+
+  * **reservation** — admission control *claims* a request's worst-case page
+    count up front (``claim``), so a mid-flight request can never hit an
+    out-of-pages condition; the scheduler defers queued requests while
+    ``can_claim`` is False (backpressure, never drops).
+  * **lazy assignment** — pages are only *assigned* to table blocks as
+    ``pos`` actually approaches them (``ensure``), so a request that
+    finishes early never touches most of its claim.
+  * **reclamation** — ``release`` returns both assigned pages and the
+    unused remainder of the claim to the free list; no zeroing is needed
+    (the decode mask hides every position beyond a slot's ``pos``, and a
+    page is always written before the mask can expose it).
+
+Beyond the allocatable ids the device pools carry two static regions the
+allocator never touches: ``batch * n * span`` *scratch* pages used by the
+jitted draft/target phases for copy-on-write candidate branching, and one
+*trash* page (the last row) that absorbs the engine's benign
+garbage-at-``pos`` writes for rows that are done or never admitted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+def pages_for(positions: int, page_size: int) -> int:
+    """Pages needed to hold ``positions`` cache positions (ceil)."""
+    return -(-positions // page_size)
+
+
+@dataclass
+class PagePool:
+    """Ledger over ``num_pages`` allocatable page ids (0..num_pages-1)."""
+    num_pages: int
+    page_size: int
+    free: List[int] = field(default=None)
+    claimed: Dict[int, int] = field(default_factory=dict)   # slot -> unassigned claim
+    assigned: Dict[int, List[int]] = field(default_factory=dict)  # slot -> pages by block
+    peak_assigned: int = 0
+    peak_in_use: int = 0          # assigned + outstanding claims
+
+    def __post_init__(self):
+        if self.free is None:
+            # pop() takes from the end: keep ids ascending for readability
+            self.free = list(range(self.num_pages - 1, -1, -1))
+
+    # -- queries -------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def num_assigned(self) -> int:
+        return sum(len(v) for v in self.assigned.values())
+
+    @property
+    def num_claimed(self) -> int:
+        """Pages reserved by admission control but not yet assigned."""
+        return sum(self.claimed.values())
+
+    @property
+    def num_in_use(self) -> int:
+        return self.num_assigned + self.num_claimed
+
+    def can_claim(self, pages: int) -> bool:
+        return self.num_free - self.num_claimed >= pages
+
+    def blocks_assigned(self, slot: int) -> int:
+        return len(self.assigned.get(slot, ()))
+
+    # -- transitions ---------------------------------------------------
+    def claim(self, slot: int, pages: int) -> None:
+        """Reserve ``pages`` for ``slot`` (admission control)."""
+        if slot in self.claimed or slot in self.assigned:
+            raise ValueError(f"slot {slot} already holds a claim")
+        if not self.can_claim(pages):
+            raise ValueError(
+                f"cannot claim {pages} pages: {self.num_free} free, "
+                f"{self.num_claimed} already claimed")
+        self.claimed[slot] = pages
+        self.assigned[slot] = []
+        self.peak_in_use = max(self.peak_in_use, self.num_in_use)
+
+    def ensure(self, slot: int, nblocks: int) -> List[Tuple[int, int]]:
+        """Assign pages so ``slot`` covers table blocks [0, nblocks).
+
+        Draws from the slot's claim; returns the new (block, page) pairs
+        (empty if already covered).  Called by the engine host loop before
+        every jitted phase that may write new blocks.
+        """
+        if slot not in self.assigned:
+            raise ValueError(f"slot {slot} has no claim")
+        pages = self.assigned[slot]
+        new = []
+        while len(pages) < nblocks:
+            if self.claimed[slot] <= 0:
+                raise ValueError(
+                    f"slot {slot} exceeded its page claim (needs block "
+                    f"{len(pages)}; admission control under-reserved)")
+            page = self.free.pop()
+            self.claimed[slot] -= 1
+            new.append((len(pages), page))
+            pages.append(page)
+        if new:
+            self.peak_assigned = max(self.peak_assigned, self.num_assigned)
+        return new
+
+    def release(self, slot: int) -> int:
+        """Free the slot's assigned pages and drop its remaining claim."""
+        if slot not in self.assigned:
+            raise ValueError(f"slot {slot} has no claim")
+        pages = self.assigned.pop(slot)
+        self.free.extend(reversed(pages))
+        self.claimed.pop(slot, None)
+        return len(pages)

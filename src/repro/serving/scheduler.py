@@ -115,12 +115,19 @@ class GSIScheduler:
         budget = int(max_steps if max_steps is not None else g.max_steps)
         if budget < 1:
             raise ValueError("max_steps must be >= 1")
-        need = prompt.size - 1 + budget * g.max_step_tokens
+        need = self.engine.positions_needed(prompt.size, budget)
         if need > self.engine.max_seq:
             raise ValueError(
                 f"request needs up to {need} cache positions but engine "
                 f"max_seq={self.engine.max_seq}; shorten the prompt or "
                 f"lower max_steps")
+        if getattr(self.engine, "paged", False):
+            blocks = self.engine.blocks_needed(prompt.size, budget)
+            if blocks > self.engine.num_pages:
+                raise ValueError(
+                    f"request needs up to {blocks} pages but the pool "
+                    f"only has {self.engine.num_pages}; it could never "
+                    f"be admitted")
         if request_id is None:
             request_id = f"req-{self._seq}"
         self._seq += 1
@@ -146,14 +153,25 @@ class GSIScheduler:
         return bool(self.queue) and self.queue[0].arrival_time <= now
 
     def _admit_ready(self, now: float) -> List[str]:
-        """Move arrived requests from the queue into free slots."""
+        """Move arrived requests from the queue into free slots.
+
+        Paged engines additionally gate on free pages: if the head
+        request's worst-case page claim doesn't fit, admission stops (the
+        request stays queued — back-pressure, never dropped) and retries
+        on a later step once finished requests have returned pages.
+        """
         if not self.continuous and self.pool.num_live > 0:
             return []
         free = self.pool.free_slots()
         batch: Dict[int, Request] = {}
         while free and self._ready(now):
-            req = self.queue.popleft()
-            batch[free.pop(0)] = req
+            req = self.queue[0]
+            if not self.engine.admit_ok(req.prompt.size, req.max_steps):
+                break                      # out of pages: defer, keep order
+            self.queue.popleft()
+            slot = free.pop(0)
+            self.engine.claim_slot(slot, req.prompt.size, req.max_steps)
+            batch[slot] = req
         if not batch:
             return []
         longest = max(r.prompt.size for r in batch.values())
@@ -208,6 +226,7 @@ class GSIScheduler:
                 resp.finish_reason = reason
                 resp.finished_at = self._now()
                 self.pool.release(slot)
+                self.engine.release_slot(slot)
                 del self._partial[slot]
                 self.responses[resp.request_id] = resp
                 self.stats.requests_finished += 1

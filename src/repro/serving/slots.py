@@ -34,6 +34,10 @@ class SlotPool:
         if self.slot_request is None:
             self.slot_request = [None] * self.capacity
         assert len(self.slot_request) == self.capacity
+        # request-id -> slot index, kept in sync by claim/release so
+        # slot_of is O(1) (it runs per finished request per step)
+        self._slot_of: Dict[str, int] = {
+            r: i for i, r in enumerate(self.slot_request) if r is not None}
 
     # -- queries -------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -54,10 +58,7 @@ class SlotPool:
         return self.slot_request[slot]
 
     def slot_of(self, request_id: str) -> Optional[int]:
-        for i, r in enumerate(self.slot_request):
-            if r == request_id:
-                return i
-        return None
+        return self._slot_of.get(request_id)
 
     # -- transitions ---------------------------------------------------
     def claim(self, slot: int, request_id: str) -> None:
@@ -65,12 +66,14 @@ class SlotPool:
             raise ValueError(f"slot {slot} already holds "
                              f"{self.slot_request[slot]!r}")
         self.slot_request[slot] = request_id
+        self._slot_of[request_id] = slot
 
     def release(self, slot: int) -> str:
         rid = self.slot_request[slot]
         if rid is None:
             raise ValueError(f"slot {slot} is already free")
         self.slot_request[slot] = None
+        del self._slot_of[rid]
         return rid
 
 

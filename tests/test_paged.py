@@ -1,0 +1,458 @@
+"""Paged KV-cache tests: allocator, COW branching, paged-vs-dense parity.
+
+Layers of coverage:
+  * PagePool ledger (claim / lazy ensure / release / exhaustion).
+  * paged_attention oracle == dense decode attention bit-for-bit on full
+    layers across ragged ``pos`` and page-boundary-straddling positions;
+    Pallas kernel (interpret mode) vs the oracle.
+  * branch_pages / branch_cache copy-on-write semantics.
+  * End-to-end: paged engine reproduces the dense engine's committed
+    tokens exactly (same rng, same prompts) through engine.run and
+    GSIScheduler.run, on full-attention, sliding-window and hybrid
+    recurrent stacks.
+  * Scheduler back-pressure: queued requests are deferred (not dropped)
+    when the page pool is exhausted and admitted once pages free.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig, ModelConfig
+from repro.kernels import ref
+from repro.models import build_model
+from repro.models.attention import _decode_mask, gqa_attention
+from repro.serving import (GSIScheduler, GSIServingEngine, PagePool,
+                           branch_cache, branch_pages, paged_view)
+
+PAD = 0
+
+
+def _triple(draft):
+    target = dataclasses.replace(draft, name=draft.name + "-t", num_layers=3)
+    prm = dataclasses.replace(target, name=draft.name + "-p",
+                              reward_head=True)
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+@pytest.fixture(scope="module")
+def gcfg():
+    return GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                     min_step_reward=-1.0)
+
+
+@pytest.fixture(scope="module")
+def dense_triple(tiny_dense):
+    return _triple(tiny_dense)
+
+
+# ----------------------------------------------------------------------
+# PagePool ledger
+# ----------------------------------------------------------------------
+
+def test_page_pool_claim_ensure_release():
+    pool = PagePool(6, page_size=8)
+    assert pool.can_claim(6) and not pool.can_claim(7)
+    pool.claim(0, 4)
+    assert pool.num_claimed == 4 and pool.num_assigned == 0
+    assert not pool.can_claim(3)          # only 2 unclaimed left
+    new = pool.ensure(0, 2)
+    assert [b for b, _ in new] == [0, 1]
+    assert pool.num_assigned == 2 and pool.num_claimed == 2
+    assert pool.ensure(0, 2) == []        # already covered
+    pool.claim(1, 2)
+    with pytest.raises(ValueError):
+        pool.claim(1, 1)                  # double claim
+    with pytest.raises(ValueError):
+        pool.claim(2, 1)                  # pool fully reserved
+    assert pool.release(0) == 2           # 2 assigned pages returned
+    assert pool.num_free == 6 and pool.can_claim(4)
+    with pytest.raises(ValueError):
+        pool.release(0)
+
+
+def test_page_pool_over_ensure_raises():
+    pool = PagePool(4, page_size=8)
+    pool.claim(0, 1)
+    with pytest.raises(ValueError):
+        pool.ensure(0, 2)                 # exceeds the slot's claim
+
+
+# ----------------------------------------------------------------------
+# Oracle and kernel
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("pos", [0, 7, 8, 9, 23, 39])   # page straddles
+@pytest.mark.parametrize("window", [0, 11])             # + sliding window
+def test_paged_oracle_matches_dense_bitwise(pos, window):
+    """Paged decode == dense decode attention, bit for bit.
+
+    The paged table scatters the logical rows across a shuffled pool;
+    masked rows contribute exactly 0.0, so stale page content is
+    irrelevant and the result is identical to the contiguous layout —
+    for full layers and for the absolute-layout sliding-window mask.
+    """
+    B, H, KV, hd, ps, nblk = 2, 4, 2, 16, 8, 5
+    S = nblk * ps
+    ks = jax.random.split(jax.random.PRNGKey(pos), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    positions = jnp.array([pos, max(0, pos - 3)])
+
+    # scatter the dense rows into a shuffled page pool
+    P = B * nblk + 3
+    perm = np.random.default_rng(pos).permutation(P)[:B * nblk]
+    pt = jnp.asarray(perm.reshape(B, nblk))
+    kp = jnp.zeros((P, ps, KV, hd))
+    vp = jnp.zeros((P, ps, KV, hd))
+    for b in range(B):
+        for j in range(nblk):
+            kp = kp.at[perm[b * nblk + j]].set(k[b, j * ps:(j + 1) * ps])
+            vp = vp.at[perm[b * nblk + j]].set(v[b, j * ps:(j + 1) * ps])
+
+    got = ref.paged_attention_ref(q, kp, vp, pt, positions, window=window)
+    if window:
+        slots = jnp.arange(S)[None, :]
+        mask = ((slots <= positions[:, None])
+                & (slots > positions[:, None] - window))[:, None]
+    else:
+        mask = _decode_mask(S, positions, ring=False)
+    want = gqa_attention(q, k, v, mask, hd ** -0.5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,H,KV,hd,ps,nblk,window", [
+    (2, 4, 2, 16, 8, 4, 0),
+    (1, 3, 1, 32, 16, 3, 0),
+    (3, 4, 4, 16, 8, 5, 10),     # sliding window
+    (2, 2, 2, 8, 4, 7, 6),       # window straddling many small pages
+])
+def test_paged_kernel_matches_oracle(B, H, KV, hd, ps, nblk, window):
+    from repro.kernels.paged_attention import paged_attention_pallas
+    P = B * nblk + 2
+    ks = jax.random.split(jax.random.PRNGKey(B + hd + window), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kp = jax.random.normal(ks[1], (P, ps, KV, hd))
+    vp = jax.random.normal(ks[2], (P, ps, KV, hd))
+    pt = jax.random.randint(ks[3], (B, nblk), 0, P)
+    # ragged positions incl. 0 and a page-boundary straddle
+    pos = jnp.asarray(np.linspace(0, nblk * ps - 1, B).astype(np.int32))
+    out = paged_attention_pallas(q, kp, vp, pt, pos, window=window,
+                                 interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, pt, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-6, rtol=3e-6)
+
+
+def test_paged_oracle_respects_score_dtype_knob(monkeypatch):
+    """REPRO_ATTN_SCORES_BF16=1 must flip the oracle's score buffers
+    exactly like the dense path's _score_dtype(), preserving bit-identity."""
+    monkeypatch.setenv("REPRO_ATTN_SCORES_BF16", "1")
+    B, H, KV, hd, ps, nblk = 1, 2, 1, 16, 8, 2
+    S = nblk * ps
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    positions = jnp.array([11])
+    pt = jnp.arange(nblk)[None]
+    kp = k.reshape(nblk, ps, KV, hd)
+    vp = v.reshape(nblk, ps, KV, hd)
+    got = ref.paged_attention_ref(q, kp, vp, pt, positions)
+    want = gqa_attention(q, k, v, _decode_mask(S, positions, ring=False),
+                         hd ** -0.5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_dispatch_paged_interpret(monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (1, 1, 2, 8))
+    kp = jax.random.normal(ks[1], (4, 4, 2, 8))
+    vp = jax.random.normal(ks[2], (4, 4, 2, 8))
+    pt = jnp.array([[2, 0, 3]])
+    pos = jnp.array([9])
+    np.testing.assert_allclose(
+        np.asarray(ops.paged_attention(q, kp, vp, pt, pos)),
+        np.asarray(ref.paged_attention_ref(q, kp, vp, pt, pos)),
+        atol=3e-6, rtol=3e-6)
+
+
+# ----------------------------------------------------------------------
+# Copy-on-write branching
+# ----------------------------------------------------------------------
+
+def test_branch_pages_aliases_prefix_and_redirects_writes():
+    ps = 8
+    pt = jnp.array([[3, 4, 5, 9], [6, 7, 9, 9]], jnp.int32)  # 9 = trash
+    pos = jnp.array([12, 4])              # write blocks 1 and 0
+    scratch = jnp.arange(10, 22, dtype=jnp.int32).reshape(2, 2, 3)
+    bpt = np.asarray(branch_pages(pt, pos, scratch, ps))
+    assert bpt.shape == (4, 4)
+    # request 0 (blk0=1): committed block 0 aliased, blocks 1.. scratch
+    np.testing.assert_array_equal(bpt[0], [3, 10, 11, 12])
+    np.testing.assert_array_equal(bpt[1], [3, 13, 14, 15])
+    # request 1 (blk0=0): every block scratch, trash column preserved
+    np.testing.assert_array_equal(bpt[2], [16, 17, 18, 9])
+    np.testing.assert_array_equal(bpt[3], [19, 20, 21, 9])
+
+
+def test_branch_cache_cow_copies_only_partial_page(dense_triple, gcfg):
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8)
+    prompts = np.array([[5, 6, 7, 8, 9, 3, 2, 4, 11, 12, 13, 4]], np.int32)
+    state = eng.init_state(prompts)       # pos = 11: page 1 is partial
+    cache = state["caches"]["S"]
+    scr = state["scratch"][:, :2]
+    branched = branch_cache(cache, 2, state["pt"], state["pos"], scr,
+                            eng.page_size)
+    pt = np.asarray(state["pt"])
+    blk0 = int(state["pos"][0]) // 8
+    flat = jax.tree_util.tree_leaves(cache)
+    bflat = jax.tree_util.tree_leaves(branched)
+    for a, b in zip(flat, bflat):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape:            # dense leaf repeated
+            continue
+        # committed pages bit-identical in the branched pool
+        for j in range(blk0 + 1):
+            page = pt[0, j]
+            if a.ndim == 4:               # (P, ps, KV, hd)
+                np.testing.assert_array_equal(a[page], b[page])
+            else:                         # (reps, P, ps, KV, hd)
+                np.testing.assert_array_equal(a[:, page], b[:, page])
+        # COW: each branch's first scratch page == committed partial page
+        for jbr in range(2):
+            s0 = int(np.asarray(scr)[0, jbr, 0])
+            if a.ndim == 4:
+                np.testing.assert_array_equal(b[s0], a[pt[0, blk0]])
+            else:
+                np.testing.assert_array_equal(b[:, s0], a[:, pt[0, blk0]])
+
+
+def test_paged_view_matches_dense_cache(dense_triple, gcfg):
+    """Gathering the pool through the table reproduces the dense cache on
+    every committed position."""
+    cfgs, params = dense_triple
+    e0 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48)
+    e1 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                          page_size=8)
+    prompts = np.array([[5, 6, 7, 8, 9, 3, 4], [7, 3, 4, PAD, PAD, PAD,
+                                                PAD]], np.int32)
+    s0 = e0.init_state(prompts)
+    s1 = e1.init_state(prompts)
+    view = paged_view(s1["caches"]["S"], s1["pt"])
+    pos = np.asarray(s0["pos"])
+    d0 = jax.tree_util.tree_flatten_with_path(s0["caches"]["S"])[0]
+    d1 = jax.tree_util.tree_flatten_with_path(view)[0]
+    assert [p for p, _ in d0] == [p for p, _ in d1]
+    for (path, a), (_, b) in zip(d0, d1):
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        a, b = np.asarray(a), np.asarray(b)
+        for r in range(prompts.shape[0]):
+            rows_a = a[:, r] if stacked else a[r]
+            rows_b = b[:, r] if stacked else b[r]
+            seq_ax = 1 if stacked else 0
+            sl = [slice(None)] * rows_a.ndim
+            sl[seq_ax] = slice(0, int(pos[r]))
+            np.testing.assert_array_equal(rows_a[tuple(sl)],
+                                          rows_b[tuple(sl)])
+
+
+# ----------------------------------------------------------------------
+# End-to-end parity (the acceptance criterion)
+# ----------------------------------------------------------------------
+
+def _tokens(responses):
+    return [[s.tolist() for s in r] for r in responses]
+
+
+@pytest.mark.parametrize("pattern,window", [
+    (("full",), 0),
+    (("full", "local"), 12),
+    (("recurrent", "full"), 0),
+])
+def test_paged_engine_run_matches_dense(gcfg, pattern, window):
+    base = ModelConfig(
+        name=f"t-pg-{'-'.join(pattern)}", family="dense"
+        if "recurrent" not in pattern else "hybrid",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=64, head_dim=16, dtype="float32", param_dtype="float32",
+        layer_pattern=pattern, window_size=window or 4096)
+    cfgs, params = _triple(base)
+    e0 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48)
+    e1 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                          page_size=8)
+    prompts = np.array([[5, 6, 4], [7, 3, 4]], np.int32)
+    r0, s0 = e0.run(prompts, jax.random.PRNGKey(3))
+    r1, s1 = e1.run(prompts, jax.random.PRNGKey(3))
+    assert _tokens(r0) == _tokens(r1)
+    assert s0.steps == s1.steps
+
+
+def test_paged_scheduler_run_matches_dense(dense_triple, gcfg):
+    """Same rng, same prompts -> identical committed tokens through the
+    continuous-batching scheduler with slot reuse."""
+    cfgs, params = dense_triple
+    outs = []
+    for paged in (False, True):
+        eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48,
+                               paged=paged, page_size=8)
+        sched = GSIScheduler(eng, capacity=2)
+        ids = [sched.submit([5, 6, 4]), sched.submit([7, 3, 4]),
+               sched.submit([9, 9, 4], max_steps=2),
+               sched.submit([11, 5, 4], max_steps=1)]
+        out = sched.run(jax.random.PRNGKey(7))
+        outs.append({r: out[r].tokens.tolist() for r in ids})
+    assert outs[0] == outs[1]
+
+
+def test_paged_modes_run(dense_triple, gcfg):
+    """Every engine mode runs (and frees all pages) under paging."""
+    cfgs, params = dense_triple
+    for mode in ("gsi", "rsd", "sbon_s", "sbon_b", "gsi_norej"):
+        eng = GSIServingEngine(*cfgs, *params, gcfg, mode=mode, max_seq=48,
+                               paged=True, page_size=8)
+        sched = GSIScheduler(eng, capacity=2)
+        for _ in range(3):
+            sched.submit([5, 6, 4], max_steps=2)
+        out = sched.run(jax.random.PRNGKey(1))
+        assert len(out) == 3, mode
+        assert eng.pager.num_assigned == 0, mode     # all pages returned
+        assert eng.pager.num_free == eng.num_pages, mode
+
+
+# ----------------------------------------------------------------------
+# Scheduler back-pressure on page exhaustion
+# ----------------------------------------------------------------------
+
+def test_scheduler_defers_on_page_exhaustion(dense_triple, gcfg):
+    """With pages for only one request in flight, the second queued
+    request must be deferred — not dropped — while slots are free, then
+    admitted after the first finishes and returns its pages."""
+    cfgs, params = dense_triple
+    # blocks_needed(3, 3) = (2 + 15) // 8 + 1 = 3 pages; pool holds 3,
+    # so only one of the two requests fits in flight at a time
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8, num_pages=3)
+    sched = GSIScheduler(eng, capacity=2)
+    first = sched.submit([5, 6, 4], max_steps=3)
+    second = sched.submit([7, 3, 4], max_steps=3)
+    rng = jax.random.PRNGKey(0)
+    done = []
+    steps_to_first = 0
+    while not done:                       # second deferred while first runs
+        steps_to_first += 1
+        rng, k = jax.random.split(rng)
+        done = sched.step(k)
+        assert len(sched.queue) == 1 and sched.queue[0].id == second
+        assert sched.pool.num_free >= 1   # a free slot the whole time
+    assert [r.request_id for r in done] == [first]
+    done = []
+    while not done:                       # pages freed -> admitted now
+        rng, k = jax.random.split(rng)
+        done = sched.step(k)
+    assert [r.request_id for r in done] == [second]
+    assert second in sched.responses      # deferred, not dropped
+    assert eng.pager.num_free == eng.num_pages
+
+
+def test_stale_paged_state_raises(dense_triple, gcfg):
+    """A paged engine backs one live state: stepping a state created
+    before the latest fresh_state/init_state must raise, not silently
+    hand its pages to the newer state."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8)
+    prompts = np.array([[5, 6, 4]], np.int32)
+    old = eng.init_state(prompts)
+    eng.init_state(prompts)               # invalidates `old`
+    with pytest.raises(RuntimeError):
+        eng.step_decode(old, jax.random.PRNGKey(0))
+
+
+def test_scheduler_rejects_impossible_page_claim(dense_triple, gcfg):
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8, num_pages=2)
+    sched = GSIScheduler(eng, capacity=1)
+    with pytest.raises(ValueError):
+        sched.submit([5, 6, 4], max_steps=3)   # needs 3 pages forever
+
+
+def test_released_slot_writes_cannot_corrupt_pages(dense_triple, gcfg):
+    """After a request finishes and its pages are freed, the freed slot's
+    table row is re-pointed at the trash page, so a recycled page owned by
+    a newly admitted request stays intact."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8, num_pages=3)
+    sched = GSIScheduler(eng, capacity=2)
+    sched.submit([5, 6, 4], max_steps=1)
+    sched.submit([7, 3, 4], max_steps=3)
+    rng = jax.random.PRNGKey(0)
+    rng, k = jax.random.split(rng)
+    sched.step(k)                         # first finishes, releases pages
+    rng, k = jax.random.split(rng)
+    sched.step(k)                         # second admitted onto its pages
+    trash = eng._trash
+    pt = np.asarray(sched.state["pt"])
+    assert (pt[0] == trash).all() or sched.pool.request_of(0) is not None
+
+
+# ----------------------------------------------------------------------
+# Satellites: token accounting, slot_of O(1) sync, bounded stats
+# ----------------------------------------------------------------------
+
+def test_sbon_b_target_token_accounting(dense_triple, gcfg):
+    """target_tokens must count the actual sampled candidate tokens, not
+    chosen != PAD times n."""
+    from repro.serving import EngineStats
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, mode="sbon_b", max_seq=48)
+    state = eng.init_state(np.array([[5, 6, 4], [7, 3, 4]], np.int32))
+    stats = EngineStats()
+    tp = eng._jit_target_phase(state, jax.random.PRNGKey(0))
+    want = int(np.sum(np.asarray(tp["cands"]) != PAD))
+    eng.step_decode(state, jax.random.PRNGKey(0),
+                    jax.random.PRNGKey(1), stats=stats)
+    assert stats.target_tokens == want
+
+
+def test_slot_of_stays_in_sync():
+    from repro.serving import SlotPool
+    pool = SlotPool(3)
+    pool.claim(2, "a")
+    pool.claim(0, "b")
+    assert pool.slot_of("a") == 2 and pool.slot_of("b") == 0
+    pool.release(2)
+    assert pool.slot_of("a") is None
+    pool.claim(2, "c")
+    assert pool.slot_of("c") == 2
+    # reconstructed pools index existing occupancy
+    pool2 = SlotPool(2, slot_request=[None, "x"])
+    assert pool2.slot_of("x") == 1
+
+
+def test_engine_stats_traces_bounded():
+    from repro.serving import EngineStats
+    stats = EngineStats(trace_limit=4)
+    rng = np.random.default_rng(0)
+    arrays = [rng.normal(size=(2, 3)) for _ in range(10)]
+    for a in arrays:
+        stats.record_trace("raw_rewards", a)
+    assert len(stats.raw_rewards) == 4            # capped
+    flat = np.concatenate([a.ravel() for a in arrays])
+    assert stats.trace_count("raw_rewards") == flat.size
+    np.testing.assert_allclose(stats.trace_mean("raw_rewards"),
+                               flat.mean(), rtol=1e-12)
+    np.testing.assert_allclose(stats.trace_var("raw_rewards"),
+                               flat.var(), rtol=1e-9)
