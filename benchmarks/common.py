@@ -84,3 +84,22 @@ def sample_problems(count: int, seed=1):
     # re-seed the task generator deterministically for reproducible sets
     task.rng = np.random.default_rng(seed)
     return [task.sample_problem() for _ in range(count)]
+
+
+def shared_prefix_prompts(count: int, pre_len: int = 33, seed=11,
+                          max_terms: int = 4):
+    """A shared-prefix workload: every request carries the same ``pre_len``
+    token preamble (the "system prompt") followed by a distinct question.
+
+    With ``page_size=16`` a 33-token preamble spans two *full* pages plus
+    one token, so the radix prefix cache can share exactly 32 prefill
+    tokens per request after the first admission.
+    """
+    from repro.data import SyntheticReasoningTask
+    from repro.data.synthetic import D0
+    task = SyntheticReasoningTask(seed=seed, min_terms=2,
+                                  max_terms=max_terms, max_value=9)
+    pre = np.asarray([D0 + (i % 10) for i in range(pre_len)], np.int32)
+    return [np.concatenate([pre, np.asarray(task.sample_problem().prompt,
+                                            np.int32)])
+            for _ in range(count)]

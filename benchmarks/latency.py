@@ -4,9 +4,15 @@ Wall-clock on this CPU container is not meaningful for TPU latency, so the
 table combines (a) engine-measured acceptance rates and step statistics
 with (b) the roofline latency model (serving/latency.py) at the paper's
 model scales (Qwen2.5-Math 1.5B/7B + 7B PRM on our v5e constants).
+
+The prefix-cache rows feed the roofline's prefill term with the prefix hit
+fraction *measured* from a shared-preamble workload through the paged
+engine's radix cache, so the reported prefill/sample times reflect
+cross-request KV sharing.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks import common
@@ -24,6 +30,26 @@ def paper_latency_model():
         return ModelCost(cfg.active_param_count(), kv)
 
     return LatencyModel(cost(draft), cost(target), cost(prm), HW_V5E)
+
+
+def measured_prefix_fraction(fast: bool = False):
+    """Run a shared-preamble workload through a paged+radix toy engine and
+    return (hit_tokens / prefill-able prompt tokens, scheduler stats)."""
+    from repro.config import GSIConfig
+    from repro.serving import GSIScheduler, GSIServingEngine
+    cfgs, params = common.get_triple()
+    g = GSIConfig(n=2, beta=8.0, threshold_u=0.4, max_step_tokens=8,
+                  max_steps=3, min_step_reward=0.0)
+    eng = GSIServingEngine(*cfgs, *params, g, max_seq=112, paged=True,
+                           page_size=16)
+    sched = GSIScheduler(eng, capacity=2, prompt_pad_len=48)
+    prompts = common.shared_prefix_prompts(6 if fast else 10, pre_len=33)
+    for p in prompts:
+        sched.submit(p, max_steps=2)
+    sched.run(jax.random.PRNGKey(0))
+    st = sched.prefix_stats()
+    total = sum(int(p.size) - 1 for p in prompts)
+    return st["hit_tokens"] / max(total, 1), st
 
 
 def run(fast: bool = False):
@@ -54,6 +80,29 @@ def run(fast: bool = False):
                            ctx_len=ctx)
         common.emit(f"table1_speedup/n{n}", 0.0,
                     f"gsi_vs_sbon_b={t_b / t_gsi:.2f}x")
+
+    # prefix cache: measured hit fraction (toy shared-preamble workload)
+    # applied to the paper-scale prompt through the roofline prefill term
+    frac, pstat = measured_prefix_fraction(fast)
+    prompt_len = 512.0
+    for n in ns:
+        acc = rates["gsi"]
+        t_cold = lm.prefill_time(prompt_len)
+        t_warm = lm.prefill_time(prompt_len, prefix_hit_len=frac * prompt_len)
+        s_cold = lm.sample_time(method="gsi", n=n, steps=steps,
+                                step_len=step_len, accept_rate=acc,
+                                prompt_len=prompt_len)
+        s_warm = lm.sample_time(method="gsi", n=n, steps=steps,
+                                step_len=step_len, accept_rate=acc,
+                                prompt_len=prompt_len,
+                                prefix_hit_len=frac * prompt_len)
+        common.emit(
+            f"table1_prefix/gsi/n{n}", s_warm * 1e6,
+            f"measured_hit_frac={frac:.2f};"
+            f"measured_hit_rate={pstat['hit_rate']:.2f};"
+            f"prefill_s={t_cold:.4f};prefill_shared_s={t_warm:.4f};"
+            f"prefill_speedup={t_cold / max(t_warm, 1e-12):.2f}x;"
+            f"sample_speedup={s_cold / max(s_warm, 1e-12):.2f}x")
 
     # Figure 4: runtime breakdown across the three models for GSI
     n = 16

@@ -81,6 +81,28 @@ def main():
             print(f"  step {j}: {fmt(s)}")
         print(f"  correct: {task.is_correct(pr, list(resp.tokens))}")
 
+    # every request shares the same "system prompt": after the first
+    # admission batch the radix prefix cache serves the preamble's full
+    # KV pages to all three models, skipping their prefill entirely
+    print("\n--- prefix caching: common system preamble ---")
+    pre = np.asarray([D0 + (i % 10) for i in range(33)], np.int32)
+    eng_px = GSIServingEngine(d, t, p, ps, pb, pp, g, max_seq=112,
+                              paged=True, page_size=16)
+    sched = GSIScheduler(eng_px, capacity=capacity)
+    for pr in problems:
+        sched.submit(np.concatenate([pre, np.array(pr.prompt, np.int32)]))
+    sched.run(jax.random.PRNGKey(3))
+    st = sched.prefix_stats()
+    print(f"requests={args.requests} capacity={capacity} "
+          f"page_size={eng_px.page_size}")
+    print(f"prefix hit_rate={st['hit_rate']:.2f} "
+          f"({st['hits']}/{st['queries']} admissions) "
+          f"pages_reused={st['pages_reused']} "
+          f"prefill_tokens_skipped={st['hit_tokens']} "
+          f"prefill_tokens={st['prefill_tokens']} "
+          f"pages_evicted={st['pages_evicted']} "
+          f"pages_cached={st['pages_cached']}")
+
 
 if __name__ == "__main__":
     main()

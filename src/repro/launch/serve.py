@@ -96,6 +96,7 @@ def evaluate_queued(engine, task, problems, rng, *, capacity: int,
             "tokens": tokens, "tokens_per_s": tokens / max(wall, 1e-9),
             "latency_p50": float(np.percentile(lat, 50)),
             "latency_p95": float(np.percentile(lat, 95)),
+            "prefix": sched.prefix_stats(),
             "stats": sched.stats, "responses": results}
 
 
@@ -119,6 +120,9 @@ def main() -> None:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page pool size (0 = dense-equivalent capacity)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix prefix cache (cross-request "
+                         "KV sharing; on by default for --paged)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -135,7 +139,8 @@ def main() -> None:
     engine = GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
                               mode=args.method, max_seq=128,
                               paged=args.paged, page_size=args.page_size,
-                              num_pages=args.num_pages)
+                              num_pages=args.num_pages,
+                              prefix_cache=not args.no_prefix_cache)
     problems = [task.sample_problem() for _ in range(args.requests)]
     res = evaluate_queued(engine, task, problems,
                           jax.random.PRNGKey(args.seed + 1),
@@ -148,6 +153,11 @@ def main() -> None:
               f"{rep['dense_branch_bytes']>>10} KiB "
               f"({rep['branch_reduction']:.1f}x); "
               f"peak assigned {rep.get('pages_peak', 0)} pages")
+        px = res["prefix"]
+        print(f"prefix cache: hit_rate={px['hit_rate']:.2f} "
+              f"prefill_tokens_skipped={px['hit_tokens']} "
+              f"pages_reused={px['pages_reused']} "
+              f"evicted={px['pages_evicted']} cached={px['pages_cached']}")
     print(f"method={args.method} n={args.n} capacity={capacity} "
           f"({'gang' if args.gang else 'continuous'}"
           f"{', paged' if args.paged else ''}): "

@@ -4,7 +4,9 @@ from repro.serving.engine import (branch_cache, branch_pages,  # noqa: F401
 from repro.serving.gsi_engine import (GSIServingEngine, EngineStats,  # noqa: F401
                                       StepResult)
 from repro.serving.latency import LatencyModel, HW_V5E  # noqa: F401
-from repro.serving.pages import PagePool, pages_for  # noqa: F401
+from repro.serving.pages import (PagePool, RadixIndex,  # noqa: F401
+                                 pages_for)
 from repro.serving.scheduler import (GSIScheduler, Request,  # noqa: F401
                                      Response)
-from repro.serving.slots import SlotPool, pack_prompts  # noqa: F401
+from repro.serving.slots import (SlotPool, pack_prompts,  # noqa: F401
+                                 pack_tails)

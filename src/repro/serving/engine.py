@@ -13,6 +13,13 @@ forks the table so the n branches alias the committed prefix's pages and
 point their write range at statically reserved scratch pages, and
 ``branch_cache`` copies only the one partial page each branch will extend
 — O(n * pages_per_step) pages instead of O(n * max_seq) rows.
+
+Pages are refcounted (serving/pages.py) and may be aliased *across
+requests* by the radix prefix cache, not just across a request's candidate
+branches: everything here treats paged pool leaves as strictly read-only
+shared storage — ``reset_cache_rows`` never zeroes them, branch writes land
+only in scratch pages, and committed writes land only at ``pos``, which
+admission guarantees is past every spliced (shared) page.
 """
 from __future__ import annotations
 
@@ -50,7 +57,9 @@ def reset_cache_rows(cache, reset_mask, stacked_key: str = "blocks"):
     prompt: attention KV beyond the reset ``pos`` is already masked out by
     the decode mask, but recurrent/RWKV state (and ring buffers) carry the
     previous occupant, so the whole row is cleared before prefill.  Paged
-    pools ({'kp','vp'}) are shared across slots and never need zeroing —
+    pools ({'kp','vp'}) are shared across slots (and, with the radix prefix
+    cache, across requests: freeing a slot merely decrements page refcounts
+    on the host) and never need zeroing —
     a page is always written before the decode mask can expose it.
     """
     def zero(path, leaf):

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import NamedTuple, Optional
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,8 @@ from repro.serving.engine import (branch_cache, branch_pages,
                                   expand_requests, fold_candidates,
                                   paged_view, repeat_cache, reset_cache_rows,
                                   take_candidates, take_per_request)
-from repro.serving.pages import PagePool, pages_for
+from repro.serving.pages import PagePool, RadixIndex, pages_for
+from repro.serving.slots import pack_tails
 
 PAD = 0
 
@@ -56,6 +57,13 @@ class EngineStats:
     draft_tokens: int = 0
     target_tokens: int = 0
     requests_finished: int = 0
+    # prefix-cache counters (filled by the scheduler's admission path)
+    prefix_queries: int = 0       # admissions that consulted the radix index
+    prefix_hits: int = 0          # admissions with matched_len > 0
+    prefix_hit_tokens: int = 0    # prompt tokens whose prefill was skipped
+    prefix_pages_reused: int = 0  # cached/shared pages spliced into tables
+    prefill_tokens: int = 0       # prompt tokens actually prefill-committed
+    pages_evicted: int = 0        # cached pages evicted to admit (LRU)
     # per-step trace arrays are bounded: at most ``trace_limit`` arrays are
     # retained per trace, while running moments keep exact aggregate
     # mean/variance for arbitrarily long serving runs (collect_stats=True
@@ -69,6 +77,10 @@ class EngineStats:
     @property
     def accept_rate(self) -> float:
         return self.accepted / max(1, self.decisions)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(1, self.prefix_queries)
 
     def record_trace(self, name: str, arr) -> None:
         """Append ``arr`` to the named trace (bounded) and fold it into
@@ -111,7 +123,8 @@ class GSIServingEngine:
                  gcfg: GSIConfig, *, mode: str = "gsi",
                  rsd_threshold: float = 0.7, max_seq: int = 512,
                  shared_scoring: bool = False, paged: bool = False,
-                 page_size: int = 16, num_pages: int = 0):
+                 page_size: int = 16, num_pages: int = 0,
+                 prefix_cache: bool = True):
         assert prm_cfg.reward_head
         self.mode = mode
         self.gcfg = gcfg
@@ -142,10 +155,28 @@ class GSIServingEngine:
         self.target = build_model(target_cfg)
         self.prm = build_model(prm_cfg)
         self.params = (params_s, params_b, params_p)
+        # cross-request prefix sharing (radix index over full committed
+        # pages) is exact for pure-attention stacks: KV row i is a function
+        # of tokens[0..i] only, and paged layers store absolute positions.
+        # Recurrent/RWKV layers keep *dense per-slot* state that a spliced
+        # page cannot carry, so sharing is auto-disabled there to preserve
+        # bit-identical outputs.
+        self.prefix_cache = bool(prefix_cache and paged
+                                 and self._prefix_supported())
         self._jit_draft_phase = jax.jit(self._draft_phase)
         self._jit_target_phase = jax.jit(self._target_phase)
         self._jit_commit = jax.jit(self._commit)
         self._jit_admit = jax.jit(self._admit)
+
+    def _prefix_supported(self) -> bool:
+        """Sharing is exact iff every layer of all three models keeps its
+        serving state in the paged (position-addressed) KV pools."""
+        def attention_only(model):
+            kinds = list(model.pattern) * model.repeats \
+                + list(model.remainder)
+            return all(k in ("full", "local") for k in kinds)
+        return all(attention_only(m)
+                   for m in (self.draft, self.target, self.prm))
 
     # ------------------------------------------------------------------
     # State
@@ -175,7 +206,8 @@ class GSIServingEngine:
         self.num_pages = self._num_pages or batch * self.nblk
         n_scratch = batch * self.nmax * self.span
         total = self.num_pages + n_scratch + 1
-        self.pager = PagePool(self.num_pages, self.page_size)
+        index = RadixIndex(self.page_size) if self.prefix_cache else None
+        self.pager = PagePool(self.num_pages, self.page_size, index=index)
         self._trash = total - 1
         self._released = set()
         scratch = (self.num_pages
@@ -241,16 +273,43 @@ class GSIServingEngine:
         need = self.positions_needed(prompt_len, budget) + 1
         return min(self.nblk, pages_for(need, self.page_size))
 
-    def admit_ok(self, prompt_len: int, budget: int) -> bool:
+    def match_prefix(self, prompt) -> Tuple[List[int], int]:
+        """Radix lookup: the longest cached page-aligned prefix of
+        ``prompt`` whose KV pages can be spliced into a new slot's block
+        table (one splice covers draft/target/PRM — the unified page-id
+        space keeps the three models position-aligned).
+
+        At most the first ``len(prompt) - 1`` tokens are matchable: the
+        engine invariant leaves the last prompt token *pending* (its KV row
+        is written by the first decode step), so the page holding it is
+        never full at admission.  Returns ``([], 0)`` when prefix caching
+        is off or unsupported for this stack.
+        """
+        if not self.paged or self.pager is None or not self.prefix_cache:
+            return [], 0
+        prompt = np.asarray(prompt).reshape(-1)
+        lim = (prompt.size - 1) // self.page_size * self.page_size
+        return self.pager.match(prompt[:max(lim, 0)])
+
+    def admit_ok(self, prompt_len: int, budget: int,
+                 shared: Sequence[int] = ()) -> bool:
         """Can a request be admitted now?  Paged engines gate on free
-        (unclaimed) pages — False means back-pressure, defer the request."""
+        (unclaimed) pages — counting matched ``shared`` pages as already
+        covered and LRU-evictable cached pages as reclaimable — so False
+        means true back-pressure: defer the request."""
         if not self.paged or self.pager is None:
             return True
-        return self.pager.can_claim(self.blocks_needed(prompt_len, budget))
+        tail = self.blocks_needed(prompt_len, budget) - len(shared)
+        return self.pager.can_claim(tail, shared)
 
-    def claim_slot(self, slot: int, prompt_len: int, budget: int) -> None:
+    def claim_slot(self, slot: int, prompt_len: int, budget: int,
+                   shared: Sequence[int] = ()) -> None:
+        """Reserve the request's worst-case *tail* pages, splicing the
+        matched ``shared`` pages in as blocks 0..len(shared)-1 (they are
+        pinned before any eviction the claim itself triggers)."""
         if self.paged:
-            self.pager.claim(slot, self.blocks_needed(prompt_len, budget))
+            tail = self.blocks_needed(prompt_len, budget) - len(shared)
+            self.pager.claim(slot, tail, shared=shared)
 
     def release_slot(self, slot: int) -> int:
         """Return a finished request's pages to the pool (no zeroing).
@@ -328,16 +387,24 @@ class GSIServingEngine:
         rep["branch_reduction"] = (
             rep["dense_branch_bytes"] / max(1, rep["paged_branch_bytes"]))
         if self.pager is not None:
-            rep["pages_assigned"] = self.pager.num_assigned
+            # distinct pages (num_referenced) are the HBM truth: a page
+            # spliced into several slots' tables occupies one page
+            rep["pages_assigned"] = self.pager.num_referenced
+            rep["pages_slot_view"] = self.pager.num_assigned
             rep["pages_peak"] = self.pager.peak_assigned
-            rep["paged_assigned_bytes"] = self.pager.num_assigned * page_b
+            rep["paged_assigned_bytes"] = self.pager.num_referenced * page_b
             rep["paged_peak_bytes"] = self.pager.peak_assigned * page_b
+            rep["pages_cached"] = self.pager.num_cached
+            rep["pages_evicted"] = self.pager.evicted
+            rep["prefix_cached_bytes"] = self.pager.num_cached * page_b
         return rep
 
-    def _ensure_blocks(self, state, wants: dict):
+    def _ensure_blocks(self, state, wants: dict, splice=None):
         """Assign pages so each slot covers ``wants[slot]`` table blocks,
-        then push the new (block -> page) entries into the device table."""
-        rows, cols, vals = [], [], []
+        then push the new (block -> page) entries into the device table.
+        ``splice`` ((rows, cols, vals) lists) folds extra table updates —
+        the prefix-cache splice of shared pages — into the same scatter."""
+        rows, cols, vals = splice if splice is not None else ([], [], [])
         for slot, nb in wants.items():
             for blk, page in self.pager.ensure(slot, nb):
                 rows.append(slot)
@@ -401,28 +468,32 @@ class GSIServingEngine:
             out["gen"] = state["gen"]
         return out
 
-    def _admit(self, state, admit_mask, prompts):
-        """Prefill prompts (B,Lp; PAD-padded) into the slots where
+    def _admit(self, state, admit_mask, tails, starts):
+        """Prefill prompt *tails* (B,Lt; PAD-padded) into the slots where
         ``admit_mask`` is True; every other slot passes through untouched.
 
-        Admitted rows are zeroed (stale recurrent state / ring buffers from
-        the previous occupant), bookkeeping is reset to the engine invariant
-        (cache holds prompt[:-1], pending = prompt[-1]) and the prompt tail
-        is teacher-forced through all three models via the regular commit
-        path with ``row_live`` masking.
+        ``tails`` holds each admitted prompt shifted past its prefix-cache
+        match: ``tails[b] = prompt[starts[b]:]`` (``starts[b] == 0`` — the
+        whole prompt — when nothing matched).  Admitted rows are zeroed
+        (stale recurrent state / ring buffers from the previous occupant;
+        shared paged pools are never touched), bookkeeping is reset to the
+        engine invariant (cache holds prompt[:-1], pending = prompt[-1],
+        the matched prefix already living in spliced pages below
+        ``starts``), and the unmatched tail is teacher-forced through all
+        three models via the regular commit path with ``row_live`` masking.
         """
         caches = reset_cache_rows(state["caches"], admit_mask)
         new = {
             "caches": caches,
-            "pending": jnp.where(admit_mask, prompts[:, 0],
+            "pending": jnp.where(admit_mask, tails[:, 0],
                                  state["pending"]),
-            "pos": jnp.where(admit_mask, 0, state["pos"]),
+            "pos": jnp.where(admit_mask, starts, state["pos"]),
             "done": jnp.where(admit_mask, False, state["done"]),
         }
         if "pt" in state:
             new["pt"], new["scratch"] = state["pt"], state["scratch"]
             new["gen"] = state["gen"]
-        return self._commit(new, prompts[:, 1:], row_live=admit_mask)
+        return self._commit(new, tails[:, 1:], row_live=admit_mask)
 
     def _branch(self, cache, n, state):
         """n scratch branches of a committed cache: dense n-way copy, or
@@ -608,28 +679,64 @@ class GSIServingEngine:
         return state, StepResult(chosen=chosen_np, done_prev=done_prev,
                                  eos=eos, failed=failed, accept=accept)
 
-    def admit(self, state, admit_mask: np.ndarray, prompts: np.ndarray):
-        """Scheduler API: prefill ``prompts`` (B,Lp) into masked slots."""
+    def admit(self, state, admit_mask: np.ndarray, prompts: np.ndarray,
+              starts=None):
+        """Scheduler API: prefill ``prompts`` (B,Lp) into masked slots.
+
+        ``starts`` (B,) gives each admitted slot's prefix-cache match
+        length (a multiple of ``page_size``; 0 = no match).  Matched blocks
+        are spliced into the slot's table from the pages its claim was
+        seeded with, only the tail ``prompt[start:]`` is prefilled, and the
+        prompt's full committed pages are published to the radix index
+        *after* the prefill commit is ordered on the device stream — a
+        request admitted on the same step can never match pages whose
+        content is still being written.
+        """
         admit_mask = np.asarray(admit_mask, bool)
         prompts = np.asarray(prompts, np.int32)
+        B = prompts.shape[0]
+        starts_np = np.zeros((B,), np.int32) if starts is None \
+            else np.asarray(starts, np.int32).copy()
+        publish = []
         if self.paged:
             self._check_gen(state)
             state = self._flush_released(state)
             lengths = (prompts != PAD).sum(axis=1)
             wants = {}
+            rows, cols, vals = [], [], []
             for slot in np.nonzero(admit_mask)[0]:
                 slot = int(slot)
                 if slot not in self.pager.assigned:
                     # direct engine use (no scheduler claim): worst case
+                    starts_np[slot] = 0
                     self.claim_slot(slot, int(lengths[slot]),
                                     self.gcfg.max_steps)
-                # prompt prefill writes positions 0 .. Lp-1
+                nshared = int(starts_np[slot]) // self.page_size
+                if nshared:
+                    # splice matched pages in as table blocks 0..nshared-1
+                    for blk, page in enumerate(
+                            self.pager.assigned[slot][:nshared]):
+                        rows.append(slot)
+                        cols.append(blk)
+                        vals.append(page)
+                # tail prefill writes positions start .. Lp-1
                 wants[slot] = min(self.nblk,
                                   pages_for(max(int(lengths[slot]), 1),
                                             self.page_size))
-            state = self._ensure_blocks(state, wants)
-        return self._jit_admit(state, jnp.asarray(admit_mask),
-                               jnp.asarray(prompts))
+                full = max(int(lengths[slot]) - 1, 0) // self.page_size
+                if self.prefix_cache and full:
+                    publish.append(
+                        (prompts[slot, :full * self.page_size], slot, full))
+            state = self._ensure_blocks(state, wants,
+                                        splice=(rows, cols, vals))
+        elif starts_np.any():
+            raise ValueError("prefix-cache starts require a paged engine")
+        tails = pack_tails(prompts, starts_np)
+        out = self._jit_admit(state, jnp.asarray(admit_mask),
+                              jnp.asarray(tails), jnp.asarray(starts_np))
+        for tokens, slot, full in publish:
+            self.pager.publish(tokens, self.pager.assigned[slot][:full])
+        return out
 
     def run(self, prompts: np.ndarray, rng, *,
             collect_stats: bool = True):

@@ -7,8 +7,13 @@ time = max(compute, memory) with
   decode   (per token)  — memory-bound: bytes = params + KV-cache read
   scoring  (per step)   — one parallel forward: compute-bound at n*L tokens
   PRM      (per step)   — ditto
+  prefill  (per sample) — one parallel forward per model over the prompt
+                          *tail* only: the radix prefix cache splices the
+                          matched pages, so prefill compute is discounted
+                          by the measured prefix hit length.
 
-fed with acceptance rates and step lengths *measured* from the engine.
+fed with acceptance rates, step lengths and prefix hit lengths *measured*
+from the engine.
 """
 from __future__ import annotations
 
@@ -73,12 +78,31 @@ class LatencyModel:
             return t
         raise ValueError(method)
 
+    def prefill_time(self, prompt_len: float,
+                     prefix_hit_len: float = 0.0) -> float:
+        """Seconds to prefill a prompt across the three models, with the
+        first ``prefix_hit_len`` tokens served from the radix prefix cache
+        (their KV pages are spliced, not recomputed).  All three models
+        skip the same span — the unified page-id space keeps draft /
+        target / PRM position-aligned, so one match discounts every
+        prefill."""
+        tail = max(float(prompt_len) - float(prefix_hit_len), 0.0)
+        if tail <= 0.0:
+            return 0.0
+        return sum(m.forward_time(self.hw, tail)
+                   for m in (self.draft, self.target, self.prm))
+
     def sample_time(self, *, method: str, n: int, steps: float,
-                    step_len: float, accept_rate: float = 1.0) -> float:
-        """End-to-end seconds per sample (ctx grows step by step)."""
-        total = 0.0
+                    step_len: float, accept_rate: float = 1.0,
+                    prompt_len: float = 0.0,
+                    prefix_hit_len: float = 0.0) -> float:
+        """End-to-end seconds per sample (prefill, then ctx grows step by
+        step).  ``prompt_len``/``prefix_hit_len`` add the prefill term and
+        its prefix-cache discount; the default 0 keeps the historical
+        decode-only accounting."""
+        total = self.prefill_time(prompt_len, prefix_hit_len)
         for s in range(int(round(steps))):
-            ctx = (s + 0.5) * step_len
+            ctx = prompt_len + (s + 0.5) * step_len
             total += self.step_time(method=method, n=n, step_len=step_len,
                                     ctx_len=ctx, accept_rate=accept_rate)
         return total

@@ -15,10 +15,26 @@ host-side ledger over the ``num_pages`` allocatable ids:
   * **lazy assignment** — pages are only *assigned* to table blocks as
     ``pos`` actually approaches them (``ensure``), so a request that
     finishes early never touches most of its claim.
-  * **reclamation** — ``release`` returns both assigned pages and the
-    unused remainder of the claim to the free list; no zeroing is needed
-    (the decode mask hides every position beyond a slot's ``pos``, and a
-    page is always written before the mask can expose it).
+  * **refcounted sharing** — a page may back the same block of several
+    slots at once (cross-request prefix sharing): each slot referencing a
+    page holds one refcount, ``release`` decrements instead of freeing, and
+    a page only leaves circulation when its last reader drops it.
+  * **content-addressed reuse** — an attached :class:`RadixIndex` keys
+    *full, committed* pages by their page-size token chunk.  ``match``
+    finds the longest cached page-aligned prefix of a new prompt;
+    ``publish`` registers a prompt's full pages after their prefill commit.
+    Pages retained by the index survive their last reader (they park in a
+    ``cached`` LRU set) and are resurrected by later matches.
+  * **eviction over deferral** — when a claim would not fit, ``claim``
+    evicts least-recently-used *unreferenced* cached pages (whole radix
+    subtrees, so the trie never holds unreachable pages) before giving up;
+    admission only defers once free + evictable pages are truly exhausted.
+
+Every allocatable page is in exactly one of three states — on the ``free``
+list, *referenced* (refcount > 0; assigned to at least one slot), or
+*cached* (refcount == 0 but retained by the radix index) — and
+``free + referenced + cached == num_pages`` always holds (the property
+tests drive random interleavings against exactly this invariant).
 
 Beyond the allocatable ids the device pools carry two static regions the
 allocator never touches: ``batch * n * span`` *scratch* pages used by the
@@ -29,7 +45,9 @@ garbage-at-``pos`` writes for rows that are done or never admitted.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.serving.radix import RadixIndex, RadixNode  # noqa: F401 (re-export)
 
 
 def pages_for(positions: int, page_size: int) -> int:
@@ -42,11 +60,16 @@ class PagePool:
     """Ledger over ``num_pages`` allocatable page ids (0..num_pages-1)."""
     num_pages: int
     page_size: int
+    index: Optional[RadixIndex] = None    # attached = prefix caching on
     free: List[int] = field(default=None)
     claimed: Dict[int, int] = field(default_factory=dict)   # slot -> unassigned claim
     assigned: Dict[int, List[int]] = field(default_factory=dict)  # slot -> pages by block
-    peak_assigned: int = 0
-    peak_in_use: int = 0          # assigned + outstanding claims
+    refcount: Dict[int, int] = field(default_factory=dict)  # page -> live slot refs (>0)
+    retained: Set[int] = field(default_factory=set)         # pages held by the index
+    cached: Set[int] = field(default_factory=set)           # retained, refcount == 0
+    evicted: int = 0              # lifetime cached pages evicted (stats)
+    peak_assigned: int = 0        # peak *distinct* referenced pages (HBM)
+    peak_in_use: int = 0          # referenced + outstanding claims
 
     def __post_init__(self):
         if self.free is None:
@@ -60,7 +83,19 @@ class PagePool:
 
     @property
     def num_assigned(self) -> int:
+        """Slot-side view: sum of per-slot block counts (a shared page is
+        counted once per slot referencing it)."""
         return sum(len(v) for v in self.assigned.values())
+
+    @property
+    def num_referenced(self) -> int:
+        """Distinct pages with at least one live slot reference."""
+        return len(self.refcount)
+
+    @property
+    def num_cached(self) -> int:
+        """Unreferenced pages retained by the radix index (evictable)."""
+        return len(self.cached)
 
     @property
     def num_claimed(self) -> int:
@@ -69,25 +104,117 @@ class PagePool:
 
     @property
     def num_in_use(self) -> int:
-        return self.num_assigned + self.num_claimed
+        return self.num_referenced + self.num_claimed
 
-    def can_claim(self, pages: int) -> bool:
-        return self.num_free - self.num_claimed >= pages
+    def can_claim(self, pages: int, shared: Sequence[int] = ()) -> bool:
+        """Would a ``pages``-page claim (on top of ``shared`` matched pages
+        about to be pinned) fit, counting LRU-evictable cached pages?"""
+        evictable = self.num_cached - sum(1 for p in shared
+                                          if p in self.cached)
+        return self.num_free + evictable - self.num_claimed >= pages
 
     def blocks_assigned(self, slot: int) -> int:
         return len(self.assigned.get(slot, ()))
 
+    # -- refcount plumbing ---------------------------------------------
+    def _ref(self, page: int) -> None:
+        rc = self.refcount.get(page, 0)
+        if rc == 0:
+            self.cached.discard(page)     # referenced pages leave the LRU
+        self.refcount[page] = rc + 1
+
+    def _unref(self, page: int) -> None:
+        rc = self.refcount[page] - 1
+        if rc > 0:
+            self.refcount[page] = rc
+            return
+        del self.refcount[page]
+        if page in self.retained:
+            self.cached.add(page)         # survives: radix cache entry
+        else:
+            self.free.append(page)
+
+    # -- prefix cache --------------------------------------------------
+    def match(self, tokens) -> Tuple[List[int], int]:
+        """Radix lookup: (shareable pages, matched token count)."""
+        if self.index is None:
+            return [], 0
+        return self.index.match(tokens)
+
+    def publish(self, tokens, pages: Sequence[int]) -> int:
+        """Register a prompt's full committed pages in the radix index
+        (called after their prefill commit is ordered on the device
+        stream).  Duplicate chunks keep the first writer's page.  Returns
+        the number of pages newly retained.
+
+        The caller must hold a reference to every page it publishes —
+        retaining a free page would let the trie serve it while ``ensure``
+        hands it to a new writer, so that misuse raises instead.
+        """
+        if self.index is None or not pages:
+            return 0
+        if any(p not in self.refcount for p in pages):
+            raise ValueError(
+                "publish requires the caller to hold a reference to "
+                "every published page")
+        new = self.index.insert(tokens, pages)
+        self.retained.update(new)
+        return len(new)
+
+    def evict(self, need: int) -> int:
+        """Evict LRU unreferenced cached pages until ``need`` are freed.
+
+        Whole radix subtrees are dropped at once so no page is left
+        retained-but-unreachable: refcount-0 pages of the subtree go back
+        to the free list now, still-referenced ones merely lose their cache
+        retention and will be freed by their last ``release``.
+        """
+        freed = 0
+        while freed < need and self.cached:
+            page = self.index.lru_page(self.cached)
+            if page is None:              # cached page vanished from trie
+                stray = self.cached.pop()
+                self.retained.discard(stray)
+                self.free.append(stray)
+                freed += 1
+                self.evicted += 1
+                continue
+            for p in self.index.drop_subtree(page):
+                self.retained.discard(p)
+                if p in self.cached:
+                    self.cached.remove(p)
+                    self.free.append(p)
+                    freed += 1
+                    self.evicted += 1
+        return freed
+
     # -- transitions ---------------------------------------------------
-    def claim(self, slot: int, pages: int) -> None:
-        """Reserve ``pages`` for ``slot`` (admission control)."""
+    def claim(self, slot: int, pages: int,
+              shared: Sequence[int] = ()) -> None:
+        """Reserve ``pages`` *tail* pages for ``slot`` (admission control),
+        seeding its block table with the matched ``shared`` pages.
+
+        Pins ``shared`` first (so eviction can never free the very pages
+        being spliced), then evicts cached pages as needed to fit the tail
+        reservation; raises only if free + evictable is still short.
+        """
         if slot in self.claimed or slot in self.assigned:
             raise ValueError(f"slot {slot} already holds a claim")
-        if not self.can_claim(pages):
+        for p in shared:
+            self._ref(p)
+        deficit = pages - (self.num_free - self.num_claimed)
+        if deficit > 0:
+            self.evict(deficit)
+        if self.num_free - self.num_claimed < pages:
+            for p in shared:              # unwind the pins
+                self._unref(p)
             raise ValueError(
                 f"cannot claim {pages} pages: {self.num_free} free, "
+                f"{self.num_cached} cached, "
                 f"{self.num_claimed} already claimed")
         self.claimed[slot] = pages
-        self.assigned[slot] = []
+        self.assigned[slot] = list(shared)
+        self.peak_assigned = max(self.peak_assigned, self.num_referenced)
         self.peak_in_use = max(self.peak_in_use, self.num_in_use)
 
     def ensure(self, slot: int, nblocks: int) -> List[Tuple[int, int]]:
@@ -108,17 +235,27 @@ class PagePool:
                     f"{len(pages)}; admission control under-reserved)")
             page = self.free.pop()
             self.claimed[slot] -= 1
+            self._ref(page)
             new.append((len(pages), page))
             pages.append(page)
         if new:
-            self.peak_assigned = max(self.peak_assigned, self.num_assigned)
+            self.peak_assigned = max(self.peak_assigned,
+                                     self.num_referenced)
         return new
 
     def release(self, slot: int) -> int:
-        """Free the slot's assigned pages and drop its remaining claim."""
+        """Drop the slot's references and its remaining claim.
+
+        Shared pages with other live readers survive untouched; pages
+        retained by the radix index park in the cached LRU set; everything
+        else returns to the free list.  No zeroing is needed (the decode
+        mask hides every position beyond a slot's ``pos``, and a page is
+        always written before the mask can expose it).
+        """
         if slot not in self.assigned:
             raise ValueError(f"slot {slot} has no claim")
         pages = self.assigned.pop(slot)
-        self.free.extend(reversed(pages))
+        for page in reversed(pages):
+            self._unref(page)
         self.claimed.pop(slot, None)
         return len(pages)

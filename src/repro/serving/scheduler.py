@@ -13,6 +13,13 @@ al., 2025): a request that finishes at step 3 stops paying for its three
 KV-cache rows immediately instead of idling until the slowest request in
 its gang completes.
 
+With a paged engine, admission also consults the radix prefix cache
+(serving/pages.py + serving/radix.py): the longest cached page-aligned
+prefix of each prompt is spliced into the new slot's block table, only
+the unmatched tail is prefilled and reserved, and under pool pressure
+LRU unreferenced cached pages are evicted before a request is ever
+deferred.  ``prefix_stats()`` reports hit/evict/reuse counters.
+
 ``continuous=False`` degrades to gang scheduling (admit only into an empty
 pool, run the batch to completion) — the fixed-batch ``run()`` discipline,
 timed against the continuous mode in ``benchmarks/throughput.py``.
@@ -155,23 +162,39 @@ class GSIScheduler:
     def _admit_ready(self, now: float) -> List[str]:
         """Move arrived requests from the queue into free slots.
 
-        Paged engines additionally gate on free pages: if the head
-        request's worst-case page claim doesn't fit, admission stops (the
-        request stays queued — back-pressure, never dropped) and retries
-        on a later step once finished requests have returned pages.
+        Each admission first consults the engine's radix prefix cache: the
+        longest cached page-aligned prefix of the prompt is spliced into
+        the slot's block table and only the tail is prefilled.  Paged
+        engines additionally gate on free pages — counting LRU-evictable
+        cached pages, so admission prefers evicting cold prefix pages over
+        deferring.  If the head request's tail claim still doesn't fit,
+        admission stops (the request stays queued — back-pressure, never
+        dropped) and retries on a later step once finished requests have
+        returned pages.
         """
         if not self.continuous and self.pool.num_live > 0:
             return []
         free = self.pool.free_slots()
         batch: Dict[int, Request] = {}
+        starts = np.zeros((self.capacity,), np.int32)
         while free and self._ready(now):
             req = self.queue[0]
-            if not self.engine.admit_ok(req.prompt.size, req.max_steps):
+            shared, hit_tok = self.engine.match_prefix(req.prompt)
+            if not self.engine.admit_ok(req.prompt.size, req.max_steps,
+                                        shared=shared):
                 break                      # out of pages: defer, keep order
             self.queue.popleft()
             slot = free.pop(0)
-            self.engine.claim_slot(slot, req.prompt.size, req.max_steps)
+            self.engine.claim_slot(slot, req.prompt.size, req.max_steps,
+                                   shared=shared)
             batch[slot] = req
+            starts[slot] = hit_tok
+            self.stats.prefix_queries += 1
+            self.stats.prefix_hits += bool(hit_tok)
+            self.stats.prefix_hit_tokens += hit_tok
+            self.stats.prefix_pages_reused += len(shared)
+            self.stats.prefill_tokens += max(req.prompt.size - 1 - hit_tok,
+                                             0)
         if not batch:
             return []
         longest = max(r.prompt.size for r in batch.values())
@@ -189,8 +212,32 @@ class GSIScheduler:
             self._partial[slot] = Response(
                 request_id=req.id, admitted_at=now,
                 arrival_time=req.arrival_time)
-        self.state = self.engine.admit(self.state, mask, packed)
+        self.state = self.engine.admit(self.state, mask, packed, starts)
+        pager = getattr(self.engine, "pager", None)
+        if pager is not None:
+            self.stats.pages_evicted = pager.evicted
         return [r.id for r in batch.values()]
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Prefix-cache admission counters.
+
+        ``queries`` and ``prefill_tokens`` count every admission on any
+        engine (they are the baseline the sharing runs are compared
+        against); ``hits``/``hit_tokens``/``pages_*`` stay zero for dense
+        engines or when sharing is off/unsupported.
+        """
+        s = self.stats
+        pager = getattr(self.engine, "pager", None)
+        return {
+            "queries": s.prefix_queries,
+            "hits": s.prefix_hits,
+            "hit_rate": s.prefix_hit_rate,
+            "hit_tokens": s.prefix_hit_tokens,
+            "pages_reused": s.prefix_pages_reused,
+            "prefill_tokens": s.prefill_tokens,
+            "pages_evicted": s.pages_evicted,
+            "pages_cached": 0 if pager is None else pager.num_cached,
+        }
 
     # ------------------------------------------------------------------
     # Stepping

@@ -13,6 +13,13 @@ attention mask only admits cache positions ``<= pos``, so after a slot's
 ``pos`` is reset to 0 the previous occupant's KV is invisible and gets
 overwritten as the new request advances; recurrent/RWKV state and ring
 buffers are explicitly zeroed by ``reset_cache_rows``.
+
+Under the paged cache a slot no longer *owns* its rows: its block table
+may splice in pages shared with other slots (or retained by the radix
+prefix cache), so freeing a slot decrements per-page refcounts in
+:class:`~repro.serving.pages.PagePool` — never zeroes shared rows.
+``pack_tails`` builds the tail-only prefill array for prefix-cache hits
+(the matched prefix is spliced, not re-committed).
 """
 from __future__ import annotations
 
@@ -75,6 +82,29 @@ class SlotPool:
         self.slot_request[slot] = None
         del self._slot_of[rid]
         return rid
+
+
+def pack_tails(prompts: np.ndarray, starts: np.ndarray) -> np.ndarray:
+    """Shift each packed prompt row left past its prefix-cache match.
+
+    ``prompts``: (B, W) PAD-padded admission array; ``starts``: (B,) match
+    lengths.  Row b of the result is ``prompts[b, starts[b]:]`` padded back
+    to width W — the tail the engine actually prefills (``tails[b, 0]``
+    seeds ``pending`` at position ``starts[b]``).  Width is preserved so
+    hit-length jitter never retraces the jitted admit.
+    """
+    prompts = np.asarray(prompts, np.int32)
+    starts = np.asarray(starts, np.int64)
+    B, W = prompts.shape
+    if not starts.any():
+        return prompts
+    tails = np.full((B, W), PAD, np.int32)
+    for b in range(B):
+        s = int(starts[b])
+        if not 0 <= s < W:
+            raise ValueError(f"start {s} outside prompt width {W}")
+        tails[b, :W - s] = prompts[b, s:]
+    return tails
 
 
 def pack_prompts(prompts: Dict[int, np.ndarray], capacity: int,

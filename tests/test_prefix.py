@@ -1,0 +1,358 @@
+"""Refcounted radix prefix cache: cross-request KV sharing + eviction.
+
+Layers of coverage:
+  * RadixIndex trie semantics (match / insert dedupe / LRU / subtree drop).
+  * PagePool refcount ledger: shared claims, release survival (live readers
+    and retained cache entries), claim-time LRU eviction, pinning of
+    matched pages against the eviction the same claim triggers.
+  * End-to-end token identity: dense == paged == paged+prefix through the
+    continuous-batching scheduler on full / sliding-window stacks, with
+    hit-rate > 0 and strictly fewer prefill commits when sharing is on;
+    hybrid recurrent stacks auto-disable sharing and stay identical.
+  * Shared pages are never written by later readers (content snapshot).
+  * Pool pressure: admission evicts cached pages instead of deferring.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig, ModelConfig
+from repro.models import build_model
+from repro.serving import (GSIScheduler, GSIServingEngine, PagePool,
+                           RadixIndex, pack_tails)
+
+PAD = 0
+
+
+def _triple(draft):
+    target = dataclasses.replace(draft, name=draft.name + "-t", num_layers=3)
+    prm = dataclasses.replace(target, name=draft.name + "-p",
+                              reward_head=True)
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+@pytest.fixture(scope="module")
+def gcfg():
+    return GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                     min_step_reward=-1.0)
+
+
+@pytest.fixture(scope="module")
+def dense_triple(tiny_dense):
+    return _triple(tiny_dense)
+
+
+# 2 full pages (ps=8) of shared preamble + distinct per-request tails
+PRE = np.asarray([5 + (i % 24) for i in range(17)], np.int32)
+
+
+def _prompt(tail):
+    return np.concatenate([PRE, np.asarray(tail, np.int32)])
+
+
+# ----------------------------------------------------------------------
+# RadixIndex
+# ----------------------------------------------------------------------
+
+def test_radix_match_insert_dedupe():
+    idx = RadixIndex(page_size=4)
+    toks = list(range(10, 22))            # 3 full chunks
+    assert idx.match(toks) == ([], 0)
+    assert idx.insert(toks, [7, 3, 9]) == [7, 3, 9]
+    pages, m = idx.match(toks)
+    assert pages == [7, 3, 9] and m == 12
+    # shorter query matches its page-aligned prefix only
+    assert idx.match(toks[:7]) == ([7], 4)
+    # diverging chunk stops the walk
+    other = toks[:4] + [99, 99, 99, 99]
+    assert idx.match(other) == ([7], 4)
+    # duplicate chunks keep the first writer's page
+    assert idx.insert(toks[:8], [11, 12]) == []
+    assert idx.match(toks[:8]) == ([7, 3], 8)
+    # extending under an existing path registers only the new chunk
+    assert idx.insert(other, [11, 13]) == [13]
+    assert idx.match(other) == ([7, 13], 8)
+
+
+def test_radix_lru_and_subtree_drop():
+    idx = RadixIndex(page_size=2)
+    idx.insert([1, 2, 3, 4], [0, 1])      # chain 0 -> 1
+    # (1,2) deduped against page 0; (9,9) registers page 2 under it
+    assert idx.insert([1, 2, 9, 9], [5, 2]) == [2]
+    assert idx.match([1, 2, 9, 9])[0] == [0, 2]
+    idx.match([1, 2, 3, 4])               # touch the 3,4 branch (newer)
+    assert idx.lru_page({1, 2}) == 2      # 9,9 branch is now LRU
+    dropped = idx.drop_subtree(0)         # root chunk: whole trie goes
+    assert sorted(dropped) == [0, 1, 2]
+    assert idx.match([1, 2, 3, 4]) == ([], 0)
+    assert len(idx) == 0
+
+
+# ----------------------------------------------------------------------
+# PagePool refcounts, retention, eviction
+# ----------------------------------------------------------------------
+
+def test_shared_claim_refcounts_and_release_order():
+    pool = PagePool(6, page_size=4, index=RadixIndex(4))
+    pool.claim(0, 3)
+    pool.ensure(0, 3)
+    owned = list(pool.assigned[0])
+    pool.publish(list(range(20, 28)), owned[:2])   # 2 full pages cached
+    # second slot splices the two shared pages, claims only a 1-page tail
+    pool.claim(1, 1, shared=owned[:2])
+    assert pool.refcount[owned[0]] == 2 and pool.refcount[owned[1]] == 2
+    pool.ensure(1, 3)
+    assert pool.assigned[1][:2] == owned[:2]
+    # first reader leaves: shared pages survive with live readers
+    pool.release(0)
+    assert pool.refcount[owned[0]] == 1
+    assert owned[2] in pool.free          # unshared, unretained -> freed
+    # last reader leaves: retained pages park in the cached LRU set
+    pool.release(1)
+    assert owned[0] not in pool.free and owned[0] in pool.cached
+    assert pool.num_referenced == 0
+    assert pool.num_free + pool.num_cached == pool.num_pages
+
+
+def test_conservation_and_eviction_under_pressure():
+    pool = PagePool(4, page_size=4, index=RadixIndex(4))
+    pool.claim(0, 4)
+    pool.ensure(0, 4)
+    pool.publish(list(range(40, 56)), pool.assigned[0])
+    pool.release(0)
+    assert pool.num_cached == 4 and pool.num_free == 0
+    # a fresh 3-page claim must evict 3 LRU cached pages, not defer
+    assert pool.can_claim(3)
+    pool.claim(1, 3)
+    assert pool.evicted >= 3 and pool.num_free >= 3
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == pool.num_pages
+    # ... and the evicted chunks are gone from the index
+    assert len(pool.index) == pool.num_cached
+
+
+def test_claim_pins_matched_pages_before_evicting():
+    """free=0, 3 cached, 2 of them matched: tail claim of 2 must evict
+    only the unmatched page and fail (insufficient), never evict pinned
+    matched pages and 'succeed'."""
+    pool = PagePool(3, page_size=4, index=RadixIndex(4))
+    pool.claim(0, 3)
+    pool.ensure(0, 3)
+    pool.publish(list(range(30, 42)), pool.assigned[0])
+    pool.release(0)
+    matched, m = pool.match(list(range(30, 42)))
+    assert m == 12 and len(matched) == 3
+    shared = matched[:2]
+    assert not pool.can_claim(2, shared)   # only 1 page truly evictable
+    with pytest.raises(ValueError):
+        pool.claim(1, 2, shared=shared)
+    # failed claim unwound its pins: nothing referenced, ledger intact
+    assert pool.num_referenced == 0
+    assert pool.num_free + pool.num_cached == pool.num_pages
+    # the fitting claim succeeds by evicting the one unmatched page
+    matched, _ = pool.match(list(range(30, 42)))
+    shared = matched[:2]
+    assert pool.can_claim(1, shared)
+    pool.claim(1, 1, shared=shared)
+    assert pool.refcount[shared[0]] == 1 and pool.num_free >= 1
+
+
+def test_publish_requires_live_reference():
+    """Retaining a free page would let the trie serve it while ensure()
+    hands it to a new writer — publish must reject that outright."""
+    pool = PagePool(4, page_size=4, index=RadixIndex(4))
+    pool.claim(0, 2)
+    pool.ensure(0, 2)
+    owned = list(pool.assigned[0])
+    pool.release(0)                       # unretained -> both pages freed
+    with pytest.raises(ValueError):
+        pool.publish(list(range(8)), owned)
+    assert pool.num_free == 4 and not pool.retained
+
+
+def test_pack_tails_shifts_rows():
+    prompts = np.asarray([[3, 4, 5, 6, PAD], [7, 8, 9, PAD, PAD]], np.int32)
+    tails = pack_tails(prompts, np.asarray([2, 0]))
+    np.testing.assert_array_equal(tails[0], [5, 6, PAD, PAD, PAD])
+    np.testing.assert_array_equal(tails[1], prompts[1])
+    with pytest.raises(ValueError):
+        pack_tails(prompts, np.asarray([5, 0]))
+
+
+# ----------------------------------------------------------------------
+# End-to-end: token identity + measured sharing
+# ----------------------------------------------------------------------
+
+def _sched_run(engine, prompts, *, capacity=2, budgets=None, seed=7):
+    sched = GSIScheduler(engine, capacity=capacity)
+    ids = [sched.submit(p, max_steps=None if budgets is None else budgets[i])
+           for i, p in enumerate(prompts)]
+    out = sched.run(jax.random.PRNGKey(seed))
+    return {r: out[r].tokens.tolist() for r in ids}, sched
+
+
+def _stack_triple(pattern, window):
+    base = ModelConfig(
+        name=f"t-px-{'-'.join(pattern)}-{window}", family="dense"
+        if "recurrent" not in pattern else "hybrid",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=64, head_dim=16, dtype="float32", param_dtype="float32",
+        layer_pattern=pattern, window_size=window or 4096)
+    return _triple(base)
+
+
+@pytest.mark.parametrize("pattern,window", [
+    (("full",), 0),
+    (("full", "local"), 12),
+])
+def test_prefix_sharing_token_identical_and_hits(gcfg, pattern, window):
+    cfgs, params = _stack_triple(pattern, window)
+    prompts = [_prompt([33, 34, 4]), _prompt([35, 36, 4]),
+               _prompt([37, 38, 4]), _prompt([39, 40, 4])]
+    runs, scheds = {}, {}
+    for name, paged, prefix in [("dense", False, False),
+                                ("paged", True, False),
+                                ("prefix", True, True)]:
+        eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96,
+                               paged=paged, page_size=8,
+                               prefix_cache=prefix)
+        runs[name], scheds[name] = _sched_run(eng, prompts)
+    assert runs["dense"] == runs["paged"] == runs["prefix"]
+    ps_on = scheds["prefix"].prefix_stats()
+    ps_off = scheds["paged"].prefix_stats()
+    # the first admission batch fills both slots against an empty index;
+    # every request admitted after it matches the 2 full preamble pages
+    assert ps_on["hits"] >= 2 and ps_on["hit_rate"] > 0
+    assert ps_on["hit_tokens"] >= 2 * 16
+    assert ps_on["pages_reused"] >= 4
+    assert ps_on["prefill_tokens"] < ps_off["prefill_tokens"]
+    assert ps_off["hits"] == 0
+
+
+def test_hybrid_stack_auto_disables_sharing_and_stays_identical(gcfg):
+    cfgs, params = _stack_triple(("recurrent", "full"), 0)
+    prompts = [_prompt([33, 34, 4]), _prompt([35, 36, 4])]
+    eng_on = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                              page_size=8, prefix_cache=True)
+    eng_off = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                               page_size=8, prefix_cache=False)
+    assert not eng_on.prefix_cache       # recurrent state cannot be spliced
+    on, sched_on = _sched_run(eng_on, prompts)
+    off, _ = _sched_run(eng_off, prompts)
+    assert on == off
+    assert sched_on.prefix_stats()["hits"] == 0
+
+
+def test_identical_prompt_reuses_pages_across_slot_recycling(dense_triple,
+                                                             gcfg):
+    """The same prompt resubmitted after its first run finishes must splice
+    the cached pages (hit) and commit strictly fewer prefill tokens."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                           page_size=8)
+    assert eng.prefix_cache
+    prompt = _prompt([33, 34, 4])
+    sched = GSIScheduler(eng, capacity=1)
+    a = sched.submit(prompt, max_steps=2)
+    b = sched.submit(prompt, max_steps=2)
+    out = sched.run(jax.random.PRNGKey(3))
+    assert a in out and b in out
+    st = sched.prefix_stats()
+    assert st["queries"] == 2 and st["hits"] == 1
+    assert st["hit_tokens"] == 16        # both full preamble pages
+    assert st["pages_reused"] == 2
+    # reused pages were never re-prefilled: total commits < 2 full prompts
+    assert st["prefill_tokens"] == 2 * (prompt.size - 1) - 16
+
+
+def _pool_pages(cache, pages):
+    """Gather every paged K/V pool leaf at ``pages`` (stacked leaves carry
+    a leading repeats dim; page ids index the pool axis)."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        keys = [getattr(p, "key", None) for p in path]
+        if "kp" not in keys and "vp" not in keys:
+            continue
+        axis = 1 if "blocks" in keys else 0
+        out.append(np.asarray(jax.numpy.take(leaf, np.asarray(pages),
+                                             axis=axis)))
+    assert out
+    return out
+
+
+def test_shared_pages_survive_reader_and_content_is_never_touched(
+        dense_triple, gcfg):
+    """Snapshot the matched pages' K/V rows after the writer finishes; a
+    second request splicing them must leave every byte intact."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                           page_size=8)
+    sched = GSIScheduler(eng, capacity=1)
+    a = sched.submit(_prompt([33, 34, 4]), max_steps=2)
+    rng = jax.random.PRNGKey(11)
+    done = []
+    while not done:
+        rng, k = jax.random.split(rng)
+        done = sched.step(k)
+    assert [r.request_id for r in done] == [a]
+    cached = sorted(eng.pager.cached)
+    assert len(cached) == 2
+    before = _pool_pages(sched.state["caches"], cached)
+    b = sched.submit(_prompt([35, 36, 4]), max_steps=2)
+    while b not in sched.responses:
+        rng, k = jax.random.split(rng)
+        sched.step(k)
+    after = _pool_pages(sched.state["caches"], cached)
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(x, y)
+
+
+# ----------------------------------------------------------------------
+# Pool pressure: evict-over-defer (the acceptance criterion)
+# ----------------------------------------------------------------------
+
+def test_admission_evicts_cached_pages_instead_of_deferring(dense_triple,
+                                                            gcfg):
+    """Pool sized so the second (different-prefix) request only fits if the
+    first one's cached pages are evicted: it must be admitted on the very
+    next step after the first finishes — eviction, not deferral."""
+    cfgs, params = dense_triple
+    # blocks_needed(20, 2) = pages_for(19 + 10 + 1, 8) = 4 pages
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                           page_size=8, num_pages=4)
+    sched = GSIScheduler(eng, capacity=2)
+    pre_b = np.asarray([40 + (i % 10) for i in range(17)], np.int32)
+    a = sched.submit(_prompt([33, 34, 4]), max_steps=2)
+    rng = jax.random.PRNGKey(5)
+    done = []
+    while not done:
+        rng, k = jax.random.split(rng)
+        done = sched.step(k)
+    assert [r.request_id for r in done] == [a]
+    assert eng.pager.num_cached == 2      # preamble pages retained
+    b = sched.submit(np.concatenate([pre_b, [35, 36, 4]]), max_steps=2)
+    rng, k = jax.random.split(rng)
+    sched.step(k)
+    # admitted immediately: the queue is empty and pages were evicted
+    assert len(sched.queue) == 0 and sched.pool.request_of(0) is not None
+    assert eng.pager.evicted >= 1
+    assert sched.prefix_stats()["pages_evicted"] >= 1
+    while b not in sched.responses:
+        rng, k = jax.random.split(rng)
+        sched.step(k)
+
+
+def test_fresh_state_resets_prefix_index(dense_triple, gcfg):
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                           page_size=8)
+    _sched_run(eng, [_prompt([33, 34, 4])], capacity=1)
+    assert eng.pager.num_cached > 0
+    eng.fresh_state(1)                    # new state -> empty index
+    assert eng.pager.num_cached == 0 and eng.pager.num_free == eng.num_pages
+    assert eng.match_prefix(_prompt([33, 34, 4])) == ([], 0)

@@ -12,6 +12,7 @@ from hypothesis import given, settings
 
 from repro.core import theory, tilted_policy, tilted_rewards
 from repro.sampling.sampler import top_p_filter
+from repro.serving.pages import PagePool, RadixIndex, pages_for
 
 FINITE = dict(allow_nan=False, allow_infinity=False)
 
@@ -81,3 +82,106 @@ def test_theorem1_bound_monotone_decreasing_in_n(n, chi2, beta):
     b2 = float(theory.theorem1_kl_bound(n + 1, chi2, beta, 1.0))
     assert b2 <= b1 + 1e-9
     assert b1 >= -1e-6
+
+
+# ---------------------------------------------------------------------------
+# PagePool: refcount / radix-cache ledger invariants under random
+# claim / ensure / publish / release / evicting-claim interleavings
+# ---------------------------------------------------------------------------
+
+PS = 4          # page size (tokens per page) for the pool machine
+
+
+def _check_pool(pool: PagePool) -> None:
+    """The allocator's global invariants (see serving/pages.py)."""
+    free = set(pool.free)
+    referenced = set(pool.refcount)
+    cached = set(pool.cached)
+    # page conservation: every page in exactly one state
+    assert len(free) == len(pool.free), "free list holds duplicates"
+    assert free | referenced | cached == set(range(pool.num_pages))
+    assert not free & referenced and not free & cached
+    assert not referenced & cached
+    # refcounts strictly positive (never negative, never stale zero)
+    assert all(rc >= 1 for rc in pool.refcount.values())
+    # every assigned page is referenced; refcount >= number of readers
+    readers = {}
+    for pages in pool.assigned.values():
+        assert len(set(pages)) == len(pages), "slot repeats a page"
+        for p in pages:
+            readers[p] = readers.get(p, 0) + 1
+    assert set(readers) == referenced
+    assert all(pool.refcount[p] == n for p, n in readers.items())
+    # reservations are always honourable without eviction
+    assert pool.num_free >= pool.num_claimed
+    # cached pages are exactly the retained-but-unreferenced ones
+    assert cached == pool.retained - referenced
+    # the radix index never holds an unreachable (freed) page
+    assert set(pool.index.nodes) == pool.retained
+
+
+@settings(deadline=None, max_examples=40)
+@given(data=st.data())
+def test_page_pool_invariants_under_interleavings(data):
+    num_pages = data.draw(st.integers(3, 12), label="num_pages")
+    pool = PagePool(num_pages, PS, index=RadixIndex(PS))
+    # small token alphabet so different "prompts" collide into shared
+    # radix paths reasonably often
+    next_slot = [0]
+
+    def live_slots():
+        return sorted(pool.assigned)
+
+    def op_claim():
+        toks = data.draw(
+            st.lists(st.integers(1, 3), min_size=PS,
+                     max_size=PS * min(num_pages, 4)), label="prompt")
+        shared, m = pool.match(toks[:(len(toks) - 1) // PS * PS])
+        need = pages_for(len(toks) + 1, PS) - len(shared)
+        if not pool.can_claim(need, shared):
+            # admission would defer: nothing may have changed
+            return
+        slot = next_slot[0]
+        next_slot[0] += 1
+        pool.claim(slot, need, shared=shared)
+        # prefill covers the prompt right away (engine.admit does this)
+        pool.ensure(slot, pages_for(len(toks), PS))
+        full = (len(toks) - 1) // PS
+        if full:
+            pool.publish(toks[:full * PS], pool.assigned[slot][:full])
+
+    def op_ensure():
+        slots = live_slots()
+        if not slots:
+            return
+        slot = data.draw(st.sampled_from(slots), label="ensure_slot")
+        have = pool.blocks_assigned(slot)
+        extra = data.draw(st.integers(0, pool.claimed.get(slot, 0)),
+                          label="extra")
+        pool.ensure(slot, have + extra)
+
+    def op_release():
+        slots = live_slots()
+        if not slots:
+            return
+        slot = data.draw(st.sampled_from(slots), label="release_slot")
+        pool.release(slot)
+
+    def op_evict():
+        want = data.draw(st.integers(1, num_pages), label="evict_n")
+        pool.evict(want)
+
+    ops = {"claim": op_claim, "ensure": op_ensure,
+           "release": op_release, "evict": op_evict}
+    for _ in range(data.draw(st.integers(1, 30), label="steps")):
+        ops[data.draw(st.sampled_from(sorted(ops)), label="op")]()
+        _check_pool(pool)
+    # drain: releasing everything leaves only free + cached pages
+    for slot in live_slots():
+        pool.release(slot)
+        _check_pool(pool)
+    assert pool.num_free + pool.num_cached == pool.num_pages
+    # and a full eviction returns the pool to pristine
+    pool.evict(num_pages)
+    _check_pool(pool)
+    assert pool.num_free == pool.num_pages
