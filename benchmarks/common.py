@@ -87,19 +87,36 @@ def sample_problems(count: int, seed=1):
 
 
 def shared_prefix_prompts(count: int, pre_len: int = 33, seed=11,
-                          max_terms: int = 4):
-    """A shared-prefix workload: every request carries the same ``pre_len``
-    token preamble (the "system prompt") followed by a distinct question.
+                          max_terms: int = 4, groups: int = 1):
+    """A shared-prefix workload: every request carries a ``pre_len``-token
+    preamble (the "system prompt") followed by a distinct question.
 
     With ``page_size=16`` a 33-token preamble spans two *full* pages plus
     one token, so the radix prefix cache can share exactly 32 prefill
     tokens per request after the first admission.
+
+    ``groups > 1`` splits the request set into that many *blocks*, each
+    with its own distinct preamble — the multi-replica router workload.
+    Blocks (rather than interleaving) matter: round-robin placement then
+    provably spreads every preamble group across all replicas, while
+    preamble-affinity keeps each group on one replica.
     """
     from repro.data import SyntheticReasoningTask
     from repro.data.synthetic import D0
+    if not 1 <= groups <= 10:
+        # the preamble pattern phase-shifts a 10-digit alphabet, so only
+        # 10 mutually distinct preambles exist; beyond that groups would
+        # silently alias and locality comparisons would be meaningless
+        raise ValueError(f"groups must be in [1, 10], got {groups}")
     task = SyntheticReasoningTask(seed=seed, min_terms=2,
                                   max_terms=max_terms, max_value=9)
-    pre = np.asarray([D0 + (i % 10) for i in range(pre_len)], np.int32)
-    return [np.concatenate([pre, np.asarray(task.sample_problem().prompt,
+    out = []
+    per = -(-count // groups)
+    for g in range(groups):
+        pre = np.asarray([D0 + ((3 * g + i) % 10) for i in range(pre_len)],
+                         np.int32)
+        out.extend(
+            np.concatenate([pre, np.asarray(task.sample_problem().prompt,
                                             np.int32)])
-            for _ in range(count)]
+            for _ in range(min(per, count - g * per)))
+    return out

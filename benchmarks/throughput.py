@@ -23,6 +23,12 @@ prefill tokens skipped, with ``--check`` asserting the token streams are
 identical to the no-sharing paged run and that sharing strictly reduces
 prefill commits.
 
+A multi-replica workload (two preamble groups, greedy decoding) runs the
+same requests through one replica, two router-fronted replicas with
+preamble-affinity routing, and two with round-robin: ``--check`` asserts
+all three produce identical per-request tokens and that affinity's
+aggregate radix hit-rate strictly beats round-robin's.
+
     PYTHONPATH=src python -m benchmarks.throughput [--fast] [--check]
 """
 from __future__ import annotations
@@ -35,7 +41,7 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.serving import GSIScheduler, GSIServingEngine
+from repro.serving import GSIScheduler, GSIServingEngine, ReplicaRouter
 
 PAD = 0
 
@@ -266,6 +272,73 @@ def run(fast: bool = False, *, check: bool = False,
         f"pages_evicted={pstat['pages_evicted']};"
         f"pages_cached={pstat['pages_cached']}")
 
+    # multi-replica data-parallel serving: independent replicas (own page
+    # pool + radix index each) behind the preamble-affinity router, vs
+    # round-robin on the same two-preamble workload.  Greedy decoding
+    # (temperature=0) makes every request's trajectory a function of its
+    # prompt + budget only — independent of slot, step count, rng and
+    # batch composition — so the token streams must be identical whatever
+    # the replica count or routing policy; routing affects only locality,
+    # i.e. each replica's radix hit-rate.  Preamble groups are laid out in
+    # blocks, so round-robin provably spreads every group across both
+    # replicas (one cold miss per (group, replica) pair) while affinity
+    # keeps each group on one replica (one cold miss per group).
+    g0 = dataclasses.replace(g, temperature=0.0)
+    mr_prompts = common.shared_prefix_prompts(8, pre_len=33, groups=2)
+    mr_budgets = _budgets(len(mr_prompts), g0.max_steps)
+
+    def mr_submit(frontend):
+        for i, p in enumerate(mr_prompts):
+            frontend.submit(p, request_id=f"mr-{i}",
+                            max_steps=mr_budgets[i])
+
+    def mr_run(frontend, tag):
+        mr_submit(frontend)
+        t0 = time.perf_counter()
+        out = frontend.run(jax.random.PRNGKey(7))
+        r = {"tokens": sum(v.num_tokens for v in out.values()),
+             "wall": time.perf_counter() - t0,
+             "latencies": [v.latency for v in out.values()],
+             "engine_steps": frontend.engine_steps,
+             "prefix": frontend.prefix_stats(),
+             "token_lists": {k: v.tokens.tolist() for k, v in out.items()}}
+        _row(tag, r)
+        return r
+
+    single_eng = GSIServingEngine(*cfgs, *params, g0, mode="gsi",
+                                  max_seq=112, paged=True, page_size=16)
+    mr_single = mr_run(GSIScheduler(single_eng, capacity=1),
+                       "replicas1_single")
+    replica_engines = [
+        GSIServingEngine(*cfgs, *params, g0, mode="gsi", max_seq=112,
+                         paged=True, page_size=16) for _ in range(2)]
+    # skew=None: pure affinity for a deterministic hit-rate comparison.
+    # Warm the router, then fresh_state() — the timed phase must start
+    # from empty caches AND zeroed counters (the stale-hit-rate fix).
+    aff_router = ReplicaRouter(replica_engines, capacity=1,
+                               policy="affinity", skew=None)
+    for i, p in enumerate(mr_prompts[:2]):
+        aff_router.submit(p, request_id=f"warm-{i}", max_steps=1)
+    aff_router.run(jax.random.PRNGKey(3))
+    aff_router.fresh_state()
+    mr_aff = mr_run(aff_router, "replicas2_affinity")
+    # same engines, new router: each replica scheduler rebuilds its
+    # engine state (page pool + radix index reset, jits reused)
+    rr_router = ReplicaRouter(replica_engines, capacity=1,
+                              policy="round_robin")
+    mr_rr = mr_run(rr_router, "replicas2_round_robin")
+    aps, rps = mr_aff["prefix"], mr_rr["prefix"]
+    common.emit(
+        "throughput/replica_routing", 0.0,
+        f"affinity_hit_rate={aps['hit_rate']:.2f};"
+        f"round_robin_hit_rate={rps['hit_rate']:.2f};"
+        f"affinity_hits={aps['hits']};round_robin_hits={rps['hits']};"
+        f"affinity_prefill_tokens={aps['prefill_tokens']};"
+        f"round_robin_prefill_tokens={rps['prefill_tokens']};"
+        f"per_replica_hits="
+        f"{'/'.join(str(p['hits']) for p in aps['per_replica'])}(aff)_"
+        f"{'/'.join(str(p['hits']) for p in rps['per_replica'])}(rr)")
+
     if check:
         # the paged cache is a layout change, not an algorithm change
         assert paged["tokens"] == cont_eos["tokens"], \
@@ -294,6 +367,22 @@ def run(fast: bool = False, *, check: bool = False,
         assert pstat["prefill_tokens"] < \
             pfx_off["prefix"]["prefill_tokens"], \
             "prefix sharing must commit strictly fewer prefill tokens"
+        # multi-replica serving is a placement change, not an algorithm
+        # change: under greedy decoding every routing must reproduce the
+        # single-replica token streams request-for-request
+        assert mr_single["token_lists"] == mr_aff["token_lists"] \
+            == mr_rr["token_lists"], \
+            "multi-replica routing drifted from the single-replica run"
+        # preamble affinity must beat locality-blind round-robin on
+        # aggregate radix hit-rate for the grouped-preamble workload
+        assert aps["hit_rate"] > rps["hit_rate"], \
+            f"affinity hit-rate {aps['hit_rate']:.2f} must beat " \
+            f"round-robin {rps['hit_rate']:.2f}"
+        # fresh_state() zeroed the warm-up's counters: the timed affinity
+        # phase reports exactly its own admissions (stale-hit-rate fix)
+        assert aps["queries"] == len(mr_prompts), \
+            f"stale prefix counters: {aps['queries']} queries reported " \
+            f"for {len(mr_prompts)} admissions"
         print("# throughput check passed", flush=True)
 
 
@@ -304,9 +393,11 @@ def main():
                     help="CI smoke: tiny training budgets, implies --fast")
     ap.add_argument("--check", action="store_true",
                     help="assert continuous < gang engine steps, paged == "
-                         "dense tokens, paged scratch < dense at n=4, and "
+                         "dense tokens, paged scratch < dense at n=4, "
                          "prefix sharing: identical tokens, hit-rate > 0, "
-                         "strictly fewer prefill commits")
+                         "strictly fewer prefill commits, and multi-"
+                         "replica: single == routed tokens, affinity "
+                         "hit-rate > round-robin")
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--requests", type=int, default=0)
     args = ap.parse_args()

@@ -16,7 +16,8 @@ from repro.config import GSIConfig
 from repro.data import EOS, SEP, SyntheticReasoningTask
 from repro.data.synthetic import D0, tokens_to_int
 from repro.launch.serve import evaluate_queued, toy_triple, train_triple
-from repro.serving import GSIScheduler, GSIServingEngine
+from repro.serving import GSIScheduler, GSIServingEngine, ReplicaRouter
+from repro.serving.router import POLICIES
 
 
 def fmt(tokens):
@@ -42,6 +43,10 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--n", type=int, default=4)
     ap.add_argument("--train-steps", type=int, default=600)
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="data-parallel replicas for the router demo")
+    ap.add_argument("--router", default="affinity", choices=list(POLICIES),
+                    help="placement policy for the router demo")
     args = ap.parse_args()
 
     task = SyntheticReasoningTask(seed=0, min_terms=2, max_terms=3,
@@ -102,6 +107,37 @@ def main():
           f"prefill_tokens={st['prefill_tokens']} "
           f"pages_evicted={st['pages_evicted']} "
           f"pages_cached={st['pages_cached']}")
+
+    # scale out: N independent replicas behind the preamble-affinity
+    # router.  Two tenant "system prompts"; affinity keeps each tenant's
+    # requests on the replica that already caches its preamble pages,
+    # so per-replica hit-rates stay as high as a single replica's.
+    if args.replicas > 1:
+        print(f"\n--- multi-replica routing: {args.replicas} replicas, "
+              f"{args.router} policy ---")
+        pre_b = np.asarray([D0 + ((i + 5) % 10) for i in range(33)],
+                           np.int32)
+        engines = [GSIServingEngine(d, t, p, ps, pb, pp, g, max_seq=112,
+                                    paged=True, page_size=16)
+                   for _ in range(args.replicas)]
+        router = ReplicaRouter(engines,
+                               capacity=max(1, capacity // args.replicas),
+                               policy=args.router)
+        for i, pr in enumerate(problems):
+            preamble = pre if i < len(problems) // 2 else pre_b
+            router.submit(np.concatenate([preamble,
+                                          np.array(pr.prompt, np.int32)]))
+        router.run(jax.random.PRNGKey(4))
+        agg = router.prefix_stats()
+        print(f"aggregate hit_rate={agg['hit_rate']:.2f} "
+              f"({agg['hits']}/{agg['queries']} admissions) "
+              f"prefill_tokens={agg['prefill_tokens']} "
+              f"routing={router.routing}")
+        for rep, pstat in zip(router.replicas, agg["per_replica"]):
+            print(f"  replica {rep.index}: routed={rep.routed} "
+                  f"hit_rate={pstat['hit_rate']:.2f} "
+                  f"({pstat['hits']}/{pstat['queries']}) "
+                  f"engine_steps={rep.scheduler.engine_steps}")
 
 
 if __name__ == "__main__":

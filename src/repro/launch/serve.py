@@ -4,7 +4,12 @@ the continuous-batching scheduler and report accuracy / acceptance /
 throughput / latency-model numbers.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16 --n 4 \
-        --method gsi --capacity 8 [--train-steps 300]
+        --method gsi --capacity 8 [--train-steps 300] \
+        [--paged --replicas 2 --router affinity]
+
+``--replicas N`` serves through N data-parallel replicas (one engine,
+page pool and radix index each) behind the preamble-affinity router;
+see docs/SERVING.md for the full flag reference.
 """
 from __future__ import annotations
 
@@ -17,7 +22,8 @@ import numpy as np
 
 from repro.config import GSIConfig, ModelConfig, TrainConfig
 from repro.data import SyntheticReasoningTask, PAD
-from repro.serving import GSIScheduler, GSIServingEngine
+from repro.serving import GSIScheduler, GSIServingEngine, ReplicaRouter
+from repro.serving.router import POLICIES
 from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
 from repro.train import Trainer
 
@@ -68,16 +74,38 @@ def evaluate(engine, task, problems, rng):
             "wall_s": wall, "stats": stats}
 
 
+def make_frontend(engines, *, capacity: int, continuous: bool = True,
+                  collect_stats: bool = False, policy: str = "affinity"):
+    """One serving frontend over one or many engines.
+
+    A single engine (or a 1-list) gets a plain :class:`GSIScheduler`;
+    a list of N > 1 engines gets a :class:`ReplicaRouter` fronting N
+    replicas of ``capacity`` slots each, routed by ``policy``.  Both
+    expose the same submit()/run()/stats/prefix_stats() surface.
+    """
+    if isinstance(engines, GSIServingEngine):
+        engines = [engines]
+    if len(engines) == 1:
+        return GSIScheduler(engines[0], capacity=capacity,
+                            continuous=continuous,
+                            collect_stats=collect_stats)
+    return ReplicaRouter(engines, capacity=capacity, policy=policy,
+                         continuous=continuous,
+                         collect_stats=collect_stats)
+
+
 def evaluate_queued(engine, task, problems, rng, *, capacity: int,
-                    continuous: bool = True):
+                    continuous: bool = True, policy: str = "affinity"):
     """Queued evaluation through the continuous-batching scheduler.
 
     All requests are submitted up front (offered load >= capacity); the
     scheduler packs them onto ``capacity`` slots, re-admitting queued
-    prompts into freed slots.  Returns accuracy plus throughput/latency.
+    prompts into freed slots.  ``engine`` may also be a list of engines —
+    one per data-parallel replica, fronted by a :class:`ReplicaRouter`
+    with ``policy`` placement.  Returns accuracy plus throughput/latency.
     """
-    sched = GSIScheduler(engine, capacity=capacity, continuous=continuous,
-                         collect_stats=True)
+    sched = make_frontend(engine, capacity=capacity, continuous=continuous,
+                          collect_stats=True, policy=policy)
     ids = [sched.submit(np.asarray(p.prompt, np.int32)) for p in problems]
     t0 = time.time()
     results = sched.run(rng)
@@ -123,6 +151,13 @@ def main() -> None:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the radix prefix cache (cross-request "
                          "KV sharing; on by default for --paged)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel serving replicas (each gets its "
+                         "own engine, page pool and radix index; "
+                         "capacity is per replica)")
+    ap.add_argument("--router", default="affinity", choices=list(POLICIES),
+                    help="replica placement policy (preamble-affinity "
+                         "keeps shared-prefix requests on one replica)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -136,15 +171,24 @@ def main() -> None:
     g = GSIConfig(n=args.n, beta=args.beta, threshold_u=args.u,
                   max_step_tokens=8, max_steps=8)
     capacity = args.capacity or max(1, args.requests // 2)
-    engine = GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
-                              mode=args.method, max_seq=128,
-                              paged=args.paged, page_size=args.page_size,
-                              num_pages=args.num_pages,
-                              prefix_cache=not args.no_prefix_cache)
+    if args.replicas > 1:
+        # per-replica capacity so --replicas scales the fleet, not the
+        # footprint of each engine
+        capacity = max(1, capacity // args.replicas)
+    engines = [
+        GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
+                         mode=args.method, max_seq=128,
+                         paged=args.paged, page_size=args.page_size,
+                         num_pages=args.num_pages,
+                         prefix_cache=not args.no_prefix_cache)
+        for _ in range(args.replicas)]
+    engine = engines[0]
     problems = [task.sample_problem() for _ in range(args.requests)]
-    res = evaluate_queued(engine, task, problems,
+    res = evaluate_queued(engines if args.replicas > 1 else engine,
+                          task, problems,
                           jax.random.PRNGKey(args.seed + 1),
-                          capacity=capacity, continuous=not args.gang)
+                          capacity=capacity, continuous=not args.gang,
+                          policy=args.router)
     if args.paged:
         rep = engine.cache_memory_report(capacity)
         print(f"paged cache: {rep['num_pages']} pages x "
@@ -158,9 +202,16 @@ def main() -> None:
               f"prefill_tokens_skipped={px['hit_tokens']} "
               f"pages_reused={px['pages_reused']} "
               f"evicted={px['pages_evicted']} cached={px['pages_cached']}")
+        if args.replicas > 1:
+            for i, p in enumerate(px.get("per_replica", [])):
+                print(f"  replica {i} ({args.router}): "
+                      f"hit_rate={p['hit_rate']:.2f} "
+                      f"({p['hits']}/{p['queries']} admissions) "
+                      f"prefill_tokens={p['prefill_tokens']}")
     print(f"method={args.method} n={args.n} capacity={capacity} "
           f"({'gang' if args.gang else 'continuous'}"
-          f"{', paged' if args.paged else ''}): "
+          f"{', paged' if args.paged else ''}"
+          f"{f', {args.replicas} replicas/{args.router}' if args.replicas > 1 else ''}): "
           f"accuracy={res['accuracy']:.3f} "
           f"accept={res['accept_rate']:.2f} steps={res['steps']} "
           f"wall={res['wall_s']:.1f}s tokens/s={res['tokens_per_s']:.1f} "

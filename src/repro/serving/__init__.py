@@ -1,11 +1,31 @@
+"""Serving layer: engine, slots, pages, radix cache, scheduler, router.
+
+Public surface of the GSI serving stack, bottom-up:
+
+- :class:`GSIServingEngine` — the three-model (draft/target/PRM) decode
+  engine; dense or paged KV layout, optional radix prefix cache.
+- :class:`SlotPool` / :class:`PagePool` / :class:`RadixIndex` — host-side
+  ledgers for slots, refcounted pages and content-addressed prefixes.
+- :class:`GSIScheduler` — continuous-batching request scheduler over one
+  engine (queue, admission control, response assembly).
+- :class:`Replica` / :class:`ReplicaRouter` — data-parallel scale-out:
+  N independent engine+scheduler replicas behind a preamble-affinity
+  router.
+
+See ``docs/ARCHITECTURE.md`` for the layer map and lifecycles and
+``docs/SERVING.md`` for the operator guide.
+"""
 from repro.serving.engine import (branch_cache, branch_pages,  # noqa: F401
                                   paged_view, repeat_cache,
                                   reset_cache_rows, take_candidates)
 from repro.serving.gsi_engine import (GSIServingEngine, EngineStats,  # noqa: F401
-                                      StepResult)
+                                      StepResult, merge_engine_stats)
 from repro.serving.latency import LatencyModel, HW_V5E  # noqa: F401
 from repro.serving.pages import (PagePool, RadixIndex,  # noqa: F401
                                  pages_for)
+from repro.serving.replica import Replica, build_replicas  # noqa: F401
+from repro.serving.router import (ReplicaRouter, POLICIES,  # noqa: F401
+                                  preamble_hash)
 from repro.serving.scheduler import (GSIScheduler, Request,  # noqa: F401
                                      Response)
 from repro.serving.slots import (SlotPool, pack_prompts,  # noqa: F401

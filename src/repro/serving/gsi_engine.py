@@ -51,6 +51,15 @@ class StepResult(NamedTuple):
 
 @dataclass
 class EngineStats:
+    """Serving counters + bounded trace arrays for one engine/scheduler.
+
+    Scalar counters accumulate monotonically over a serving phase;
+    ``record_trace`` keeps at most ``trace_limit`` arrays per trace while
+    folding every array into exact running moments.  Fleet-level views
+    (the replica router) combine per-replica instances with
+    :func:`merge_engine_stats`.
+    """
+
     steps: int = 0
     accepted: int = 0
     decisions: int = 0
@@ -76,10 +85,12 @@ class EngineStats:
 
     @property
     def accept_rate(self) -> float:
+        """Fraction of live-slot decisions that accepted the draft step."""
         return self.accepted / max(1, self.decisions)
 
     @property
     def prefix_hit_rate(self) -> float:
+        """Fraction of admissions whose prompt matched cached pages."""
         return self.prefix_hits / max(1, self.prefix_queries)
 
     def record_trace(self, name: str, arr) -> None:
@@ -105,14 +116,56 @@ class EngineStats:
         ]
 
     def trace_mean(self, name: str) -> float:
+        """Exact mean of every value ever recorded into ``name``."""
         return self.moments.get(name, [0, 0.0, 0.0])[1]
 
     def trace_var(self, name: str) -> float:
+        """Exact population variance of the named trace."""
         n, _, m2 = self.moments.get(name, [0, 0.0, 0.0])
         return m2 / n if n else 0.0
 
     def trace_count(self, name: str) -> int:
+        """Total values folded into the named trace's moments."""
         return self.moments.get(name, [0, 0.0, 0.0])[0]
+
+
+def merge_engine_stats(parts: Sequence[EngineStats]) -> EngineStats:
+    """Combine per-replica :class:`EngineStats` into one fleet view.
+
+    Scalar counters sum; running moments merge exactly (the same
+    Chan/Welford combine ``record_trace`` uses, so fleet-level
+    ``trace_mean``/``trace_var`` equal what one scheduler would have
+    measured); bounded trace lists concatenate up to ``trace_limit``.
+    The inputs are left untouched.
+    """
+    out = EngineStats()
+    if not parts:
+        return out
+    out.trace_limit = parts[0].trace_limit
+    for f in ("steps", "accepted", "decisions", "draft_tokens",
+              "target_tokens", "requests_finished", "prefix_queries",
+              "prefix_hits", "prefix_hit_tokens", "prefix_pages_reused",
+              "prefill_tokens", "pages_evicted"):
+        setattr(out, f, sum(getattr(p, f) for p in parts))
+    for trace in ("tilted_rewards", "raw_rewards", "logp_ratio"):
+        for p in parts:
+            lst = getattr(out, trace)
+            lst.extend(getattr(p, trace)[:max(out.trace_limit
+                                              - len(lst), 0)])
+    for p in parts:
+        for name, (n_b, mean_b, m2_b) in p.moments.items():
+            n_a, mean_a, m2_a = out.moments.setdefault(name,
+                                                       [0, 0.0, 0.0])
+            n = n_a + n_b
+            if n == 0:
+                continue
+            delta = mean_b - mean_a
+            out.moments[name] = [
+                n,
+                mean_a + delta * n_b / n,
+                m2_a + m2_b + delta * delta * n_a * n_b / n,
+            ]
+    return out
 
 
 class GSIServingEngine:
@@ -125,6 +178,13 @@ class GSIServingEngine:
                  shared_scoring: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int = 0,
                  prefix_cache: bool = True):
+        """Build the three models and jit the engine's serving phases.
+
+        ``paged``/``page_size``/``num_pages`` select the paged KV layout
+        (``num_pages=0`` sizes the pool to the dense capacity at state
+        creation); ``prefix_cache`` enables the radix prefix index on
+        paged engines (auto-disabled for recurrent/RWKV stacks).
+        """
         assert prm_cfg.reward_head
         self.mode = mode
         self.gcfg = gcfg

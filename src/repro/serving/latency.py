@@ -22,6 +22,8 @@ from dataclasses import dataclass
 
 @dataclass(frozen=True)
 class Hardware:
+    """Peak accelerator numbers the roofline maxes against."""
+
     name: str
     flops: float          # peak bf16 FLOP/s per chip
     hbm_bw: float         # bytes/s per chip
@@ -33,6 +35,8 @@ HW_V5E = Hardware("tpu-v5e", 197e12, 819e9)
 
 @dataclass
 class ModelCost:
+    """Per-model roofline inputs (active params, KV bytes per token)."""
+
     params: int           # active params per token
     kv_bytes_per_tok: int
 
@@ -52,8 +56,11 @@ class ModelCost:
 
 
 class LatencyModel:
+    """Roofline latency model over a draft/target/PRM triple."""
+
     def __init__(self, draft: ModelCost, target: ModelCost, prm: ModelCost,
                  hw: Hardware = HW_V5E):
+        """Bind the three model costs to one hardware description."""
         self.draft, self.target, self.prm, self.hw = draft, target, prm, hw
 
     def step_time(self, *, method: str, n: int, step_len: float,

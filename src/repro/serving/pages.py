@@ -72,6 +72,7 @@ class PagePool:
     peak_in_use: int = 0          # referenced + outstanding claims
 
     def __post_init__(self):
+        """Seed the free list with every allocatable page id."""
         if self.free is None:
             # pop() takes from the end: keep ids ascending for readability
             self.free = list(range(self.num_pages - 1, -1, -1))
@@ -79,6 +80,7 @@ class PagePool:
     # -- queries -------------------------------------------------------
     @property
     def num_free(self) -> int:
+        """Pages on the free list (unclaimed, unreferenced, unretained)."""
         return len(self.free)
 
     @property
@@ -104,6 +106,7 @@ class PagePool:
 
     @property
     def num_in_use(self) -> int:
+        """Referenced pages plus outstanding (unassigned) reservations."""
         return self.num_referenced + self.num_claimed
 
     def can_claim(self, pages: int, shared: Sequence[int] = ()) -> bool:
@@ -114,6 +117,7 @@ class PagePool:
         return self.num_free + evictable - self.num_claimed >= pages
 
     def blocks_assigned(self, slot: int) -> int:
+        """Table blocks the slot's claim has materialized so far."""
         return len(self.assigned.get(slot, ()))
 
     # -- refcount plumbing ---------------------------------------------

@@ -26,6 +26,7 @@ class RadixNode:
     __slots__ = ("key", "page", "parent", "children", "clock")
 
     def __init__(self, key, page, parent, clock):
+        """Node for token chunk ``key`` holding page id ``page``."""
         self.key = key
         self.page = page
         self.parent = parent
@@ -37,6 +38,7 @@ class RadixIndex:
     """Token-trie over full committed pages (one node == one page)."""
 
     def __init__(self, page_size: int):
+        """Empty trie over ``page_size``-token chunks."""
         self.page_size = page_size
         self.root = RadixNode(None, None, None, 0)
         self.nodes: Dict[int, RadixNode] = {}
@@ -47,6 +49,7 @@ class RadixIndex:
         return self.clock
 
     def __len__(self) -> int:
+        """Number of pages (== nodes) the trie currently retains."""
         return len(self.nodes)
 
     def _chunks(self, tokens):

@@ -1,0 +1,108 @@
+"""One data-parallel serving replica: an engine + scheduler pair.
+
+A *replica* is the unit of data-parallel scale-out: one
+:class:`~repro.serving.gsi_engine.GSIServingEngine` (its own jitted
+phases, page pool and radix prefix index) driven by one
+:class:`~repro.serving.scheduler.GSIScheduler` (its own queue, slot pool
+and stats).  Replicas share nothing — no pages, no trie, no state — so a
+fleet of them is exactly N independent copies of the single-engine
+serving stack, and the only cross-replica component is the
+:class:`~repro.serving.router.ReplicaRouter` that assigns requests.
+
+Because the radix index is engine-held host state, *which* replica a
+request lands on decides whether its prompt's preamble pages are already
+cached there: the router's preamble-affinity policy exists to keep
+requests with a common prefix on the replica that holds its pages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.serving.gsi_engine import GSIServingEngine
+from repro.serving.scheduler import GSIScheduler, Response
+
+
+@dataclass
+class Replica:
+    """One router-fronted serving replica (engine + scheduler + id).
+
+    ``index`` is the replica's stable position in the router's fleet (it
+    is what the affinity hash maps to); ``scheduler`` owns the engine.
+    ``routed`` counts lifetime requests assigned here (routing stats).
+    """
+
+    index: int
+    scheduler: GSIScheduler
+    routed: int = 0
+
+    @property
+    def engine(self) -> GSIServingEngine:
+        """The replica's engine (owns this replica's pages and trie)."""
+        return self.scheduler.engine
+
+    @property
+    def load(self) -> int:
+        """Outstanding work: queued requests + live (decoding) slots.
+
+        This is the quantity the router's least-loaded policy and the
+        affinity policy's skew guard compare across replicas.
+        """
+        return len(self.scheduler.queue) + self.scheduler.pool.num_live
+
+    @property
+    def has_work(self) -> bool:
+        """True while anything is queued or decoding on this replica."""
+        return bool(self.scheduler.queue) or \
+            self.scheduler.pool.num_live > 0
+
+    def next_arrival(self) -> Optional[float]:
+        """Arrival time of the head queued request (None when empty)."""
+        if not self.scheduler.queue:
+            return None
+        return float(self.scheduler.queue[0].arrival_time)
+
+    def submit(self, prompt, *, request_id: str,
+               max_steps: Optional[int] = None,
+               arrival_time: float = 0.0) -> str:
+        """Queue a routed request on this replica's scheduler."""
+        self.routed += 1
+        return self.scheduler.submit(prompt, request_id=request_id,
+                                     max_steps=max_steps,
+                                     arrival_time=arrival_time)
+
+    def step(self, rng, rng_target=None) -> List[Response]:
+        """One scheduler step (admit / decode / harvest) on this replica.
+
+        A replica with no live slots and nothing ready to admit returns
+        without running an engine step, so idle replicas cost nothing.
+        """
+        return self.scheduler.step(rng, rng_target)
+
+
+def build_replicas(engines, *, capacity: int, continuous: bool = True,
+                   prompt_pad_len: int = 0, collect_stats: bool = False,
+                   cache_aware: bool = True) -> List[Replica]:
+    """Wrap N independent engines into router-ready replicas.
+
+    Each engine must be a distinct object: a paged engine backs one live
+    state (its page allocator is engine-held host state), so replicas can
+    never share one.  ``capacity`` is per replica — the fleet decodes
+    ``len(engines) * capacity`` slots in total.  ``cache_aware`` turns on
+    cache-aware admission ordering inside each replica (queued requests
+    with live radix matches admit first).
+    """
+    engines = list(engines)
+    if len(set(map(id, engines))) != len(engines):
+        raise ValueError(
+            "replicas must not share engine objects: a paged engine "
+            "backs one live state at a time (one page pool, one radix "
+            "index); build one engine per replica")
+    return [
+        Replica(i, GSIScheduler(eng, capacity=capacity,
+                                continuous=continuous,
+                                prompt_pad_len=prompt_pad_len,
+                                collect_stats=collect_stats,
+                                cache_aware=cache_aware))
+        for i, eng in enumerate(engines)
+    ]

@@ -1,0 +1,302 @@
+"""Multi-replica request router with preamble-affinity placement.
+
+:class:`ReplicaRouter` fronts N independent engine/scheduler replicas
+(:mod:`repro.serving.replica`) and decides, per request, which replica's
+queue it joins.  Three policies:
+
+``affinity`` (default)
+    Keep requests that share a prompt preamble on the same replica, so
+    that replica's radix prefix cache serves the preamble's KV pages to
+    all of them.  Placement is two-tier: first the prompt is matched
+    against every replica's radix index and the replica with the
+    *longest* cached prefix wins (true longest-preamble affinity —
+    pages already live there); on a miss everywhere the request falls
+    back to a deterministic hash of its first full page-size token chunk
+    (the page-aligned preamble — stable across requests that share a
+    preamble, whatever their total length), so a burst of same-preamble
+    requests submitted before any page is published still lands on one
+    replica.  Prompts shorter than one full page (nothing shareable) and
+    placements that would push a replica's load more than ``skew``
+    requests past the least-loaded replica fall back to least-loaded.
+
+``round_robin``
+    Cycle replicas in submission order (the locality-blind baseline the
+    benchmark compares affinity against).
+
+``least_loaded``
+    Always the replica with the fewest outstanding requests
+    (queued + live slots); ties break to the lowest replica index.
+
+The router assembles id-keyed :class:`Response` objects across replicas
+(out-of-order completion included) and aggregates ``prefix_stats()`` /
+``EngineStats`` over the fleet.  Replicas share nothing, so per-replica
+invariants (page conservation, one-live-state) hold independently —
+the hypothesis property test drives routed admissions against exactly
+that.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.serving.gsi_engine import EngineStats, merge_engine_stats
+from repro.serving.replica import Replica, build_replicas
+from repro.serving.scheduler import Response
+
+POLICIES = ("affinity", "round_robin", "least_loaded")
+
+
+def preamble_hash(tokens, num_replicas: int) -> int:
+    """Deterministic replica index for a token chunk.
+
+    Stable across processes (unlike builtin ``hash``, which is salted),
+    so affinity placement is reproducible run to run — the property
+    tests and the throughput ``--check`` both rely on that.
+    """
+    data = np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+    digest = hashlib.blake2b(data, digest_size=8).digest()
+    return int.from_bytes(digest, "big") % num_replicas
+
+
+class ReplicaRouter:
+    """Route requests across N independent serving replicas.
+
+    Parameters
+    ----------
+    engines:   one built :class:`GSIServingEngine` per replica (distinct
+               objects — a paged engine backs one live state).
+    capacity:  scheduler slots *per replica*.
+    policy:    ``affinity`` | ``round_robin`` | ``least_loaded``.
+    skew:      affinity-only load guard: if the affine replica's load
+               exceeds the least-loaded replica's by more than ``skew``
+               requests, route least-loaded instead (None disables the
+               guard — pure affinity, used by deterministic checks).
+    cache_aware: enable cache-aware admission ordering inside each
+               replica (queued requests with live radix matches first).
+    continuous / prompt_pad_len / collect_stats: forwarded to each
+               replica's :class:`GSIScheduler`.
+    """
+
+    def __init__(self, engines, *, capacity: int,
+                 policy: str = "affinity", skew: Optional[int] = 4,
+                 continuous: bool = True, prompt_pad_len: int = 0,
+                 collect_stats: bool = False, cache_aware: bool = True):
+        """Build one replica (engine + scheduler) per engine given."""
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {POLICIES}")
+        self.replicas: List[Replica] = build_replicas(
+            engines, capacity=capacity, continuous=continuous,
+            prompt_pad_len=prompt_pad_len, collect_stats=collect_stats,
+            cache_aware=cache_aware)
+        self.policy = policy
+        self.skew = skew
+        self.capacity = capacity
+        self.responses: Dict[str, Response] = {}
+        self.routing = {"affinity_matched": 0, "affinity_hashed": 0,
+                        "fallback_load": 0}
+        self._replica_of: Dict[str, int] = {}
+        self._rr = 0
+        self._seq = 0
+
+    # ------------------------------------------------------------------
+    # Placement
+    # ------------------------------------------------------------------
+    @property
+    def num_replicas(self) -> int:
+        """Number of replicas in the fleet."""
+        return len(self.replicas)
+
+    def loads(self) -> List[int]:
+        """Outstanding requests (queued + live) per replica."""
+        return [r.load for r in self.replicas]
+
+    def _least_loaded(self, loads: Sequence[int]) -> int:
+        return int(np.argmin(loads))          # ties -> lowest index
+
+    def route(self, prompt) -> int:
+        """Pick the replica index for ``prompt`` under the policy.
+
+        Pure placement — no queue mutation; ``submit`` calls this and
+        then hands the request to the chosen replica.
+        """
+        if self.policy == "round_robin":
+            i = self._rr
+            self._rr = (self._rr + 1) % self.num_replicas
+            return i
+        loads = self.loads()
+        if self.policy == "least_loaded":
+            return self._least_loaded(loads)
+        return self._route_affinity(np.asarray(prompt,
+                                               np.int32).reshape(-1),
+                                    loads)
+
+    def _route_affinity(self, prompt: np.ndarray,
+                        loads: Sequence[int]) -> int:
+        """Longest-preamble affinity with hash seeding and a skew guard.
+
+        Tier 1: the replica whose radix index holds the longest cached
+        prefix of ``prompt`` (ties break to the less-loaded replica).
+        Tier 2 (no replica has a match): hash the first full page-size
+        chunk of the prompt.  Tier 3 (prompt too short to ever share a
+        page): least-loaded.  Finally the skew guard may override a
+        placement that would unbalance the fleet.
+        """
+        best, best_len = None, 0
+        for rep in self.replicas:
+            _, matched = rep.engine.match_prefix(prompt)
+            if matched > best_len or (
+                    matched == best_len and matched > 0
+                    and loads[rep.index] < loads[best]):
+                best, best_len = rep.index, matched
+        if best is not None:
+            tier = "affinity_matched"
+        else:
+            page_size = self.replicas[0].engine.page_size
+            if prompt.size - 1 >= page_size:
+                best = preamble_hash(prompt[:page_size],
+                                     self.num_replicas)
+                tier = "affinity_hashed"
+            else:
+                self.routing["fallback_load"] += 1
+                return self._least_loaded(loads)
+        if self.skew is not None and \
+                loads[best] - min(loads) > self.skew:
+            # exactly one counter per request: a skew override is
+            # reported as the fallback it actually was, not as affinity
+            self.routing["fallback_load"] += 1
+            return self._least_loaded(loads)
+        self.routing[tier] += 1
+        return best
+
+    # ------------------------------------------------------------------
+    # Submission / stepping
+    # ------------------------------------------------------------------
+    def submit(self, prompt, *, request_id: Optional[str] = None,
+               max_steps: Optional[int] = None,
+               arrival_time: float = 0.0) -> str:
+        """Route a prompt to a replica queue; returns the request id.
+
+        Ids are unique fleet-wide (router-assigned ``req-N`` by default;
+        caller-provided ids are checked against every replica).
+        """
+        if request_id is None:
+            # skip ids a caller already used explicitly — a collision
+            # would silently overwrite the other request's Response
+            while f"req-{self._seq}" in self._replica_of:
+                self._seq += 1
+            request_id = f"req-{self._seq}"
+        elif request_id in self._replica_of:
+            raise ValueError(f"request id {request_id!r} already routed "
+                             f"to replica {self._replica_of[request_id]}")
+        self._seq += 1
+        idx = self.route(prompt)
+        self.replicas[idx].submit(prompt, request_id=request_id,
+                                  max_steps=max_steps,
+                                  arrival_time=arrival_time)
+        self._replica_of[request_id] = idx
+        return request_id
+
+    def replica_of(self, request_id: str) -> int:
+        """The replica index a submitted request was routed to."""
+        return self._replica_of[request_id]
+
+    def step(self, rng) -> List[Response]:
+        """Step every replica once; returns the responses finished now.
+
+        Each replica gets an independent key pair split from ``rng``, so
+        a replica's rng stream never depends on how many peers it has or
+        on what they decode.  Idle replicas skip their engine step.
+        """
+        keys = jax.random.split(rng, 2 * self.num_replicas)
+        finished: List[Response] = []
+        for rep in self.replicas:
+            k1, k2 = keys[2 * rep.index], keys[2 * rep.index + 1]
+            for resp in rep.step(k1, k2):
+                self.responses[resp.request_id] = resp
+                finished.append(resp)
+        return finished
+
+    def run(self, rng) -> Dict[str, Response]:
+        """Drain every replica; returns id -> Response across the fleet.
+
+        Mirrors ``GSIScheduler.run``: while any replica holds work, step
+        the fleet; when every live slot is drained and the earliest
+        queued arrival is still in the future, sleep until it lands.
+        """
+        while any(rep.has_work for rep in self.replicas):
+            if not any(rep.scheduler.pool.num_live
+                       for rep in self.replicas):
+                waits = [rep.next_arrival() - rep.scheduler._now()
+                         for rep in self.replicas
+                         if rep.next_arrival() is not None]
+                wait = min(waits) if waits else 0.0
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+                    continue
+            rng, k = jax.random.split(rng)
+            self.step(k)
+        return dict(self.responses)
+
+    # ------------------------------------------------------------------
+    # Fleet-level stats
+    # ------------------------------------------------------------------
+    @property
+    def engine_steps(self) -> int:
+        """Total decode steps across the fleet (sum over replicas).
+
+        Replicas step concurrently in a real deployment, so the
+        wall-clock proxy is ``max`` — see ``engine_steps_max``.
+        """
+        return sum(rep.scheduler.engine_steps for rep in self.replicas)
+
+    @property
+    def engine_steps_max(self) -> int:
+        """Decode steps of the busiest replica (parallel-time proxy)."""
+        return max(rep.scheduler.engine_steps for rep in self.replicas)
+
+    @property
+    def stats(self) -> EngineStats:
+        """Aggregate EngineStats over the fleet (counters summed,
+        trace moments merged exactly, bounded trace lists concatenated).
+        """
+        return merge_engine_stats([rep.scheduler.stats
+                                   for rep in self.replicas])
+
+    def prefix_stats(self) -> Dict[str, object]:
+        """Fleet-aggregate prefix-cache counters.
+
+        Same scalar keys as ``GSIScheduler.prefix_stats()`` (counters
+        summed, ``hit_rate`` recomputed from the sums) plus
+        ``per_replica`` with each replica's own counters — per-replica
+        hit-rates are how affinity quality is read.
+        """
+        per = [rep.scheduler.prefix_stats() for rep in self.replicas]
+        agg: Dict[str, object] = {
+            k: sum(p[k] for p in per)
+            for k in per[0] if k != "hit_rate"}
+        agg["hit_rate"] = agg["hits"] / max(1, agg["queries"])
+        agg["per_replica"] = per
+        return agg
+
+    def fresh_state(self) -> None:
+        """Reset every replica for a new serving phase.
+
+        Calls each scheduler's ``fresh_state()`` — engine state, page
+        pool and radix index are rebuilt and the prefix/stat counters
+        zeroed — and clears the router's own response and routing
+        ledgers.  Request-id uniqueness is also reset (phases are
+        independent).
+        """
+        for rep in self.replicas:
+            rep.scheduler.fresh_state()
+            rep.routed = 0
+        self.responses = {}
+        self._replica_of = {}
+        self.routing = {k: 0 for k in self.routing}
+        self._rr = 0
+        self._seq = 0

@@ -41,6 +41,8 @@ from repro.serving.slots import PAD, SlotPool, pack_prompts
 
 @dataclass
 class Request:
+    """A queued prompt awaiting admission (scheduler-internal record)."""
+
     id: str
     prompt: np.ndarray            # 1-D int32 token array (no padding)
     max_steps: int                # per-request reasoning-step budget
@@ -50,6 +52,8 @@ class Request:
 
 @dataclass
 class Response:
+    """One finished request: its step tokens, finish reason and timing."""
+
     request_id: str
     steps: List[np.ndarray] = field(default_factory=list)
     finish_reason: str = ""       # "eos" | "low_reward" | "max_steps"
@@ -60,12 +64,14 @@ class Response:
 
     @property
     def tokens(self) -> np.ndarray:
+        """All committed step tokens concatenated (PAD stripped)."""
         if not self.steps:
             return np.zeros((0,), np.int32)
         return np.concatenate([np.asarray(s, np.int32) for s in self.steps])
 
     @property
     def num_tokens(self) -> int:
+        """Total committed tokens across the response's steps."""
         return int(self.tokens.size)
 
     @property
@@ -84,17 +90,32 @@ class GSIScheduler:
     continuous:  admit into freed slots mid-flight (True) or only into an
                  empty pool (False, gang/fixed-batch discipline).
     collect_stats: forward per-step reward/ratio arrays into ``stats``.
+    cache_aware: admission-ordering policy — when True, arrived queued
+                 requests whose prompts have a *live* radix prefix match
+                 are admitted before requests that would prefill cold.
+                 Admitting a hit first both skips prefill work now and
+                 keeps the matched pages referenced (they cannot be
+                 evicted under pool pressure while the hit is decoding).
+                 Requests with equal match state keep arrival order, a
+                 deferral (out of pages) still blocks the whole queue,
+                 and the queue head is never bypassed more than a
+                 bounded number of consecutive admissions — so even an
+                 endless stream of fresher cache hits cannot starve a
+                 cold request.  Off by default because it reorders
+                 sampling streams (router replicas enable it).
     """
 
     def __init__(self, engine: GSIServingEngine, *, capacity: int,
                  continuous: bool = True, prompt_pad_len: int = 0,
-                 collect_stats: bool = False):
+                 collect_stats: bool = False, cache_aware: bool = False):
+        """Build a scheduler over ``engine`` with ``capacity`` slots."""
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.engine = engine
         self.capacity = capacity
         self.continuous = continuous
         self.collect_stats = collect_stats
+        self.cache_aware = cache_aware
         self.pool = SlotPool(capacity)
         self.queue: deque = deque()
         self.state = engine.fresh_state(capacity)
@@ -107,6 +128,33 @@ class GSIScheduler:
         self._pad = int(prompt_pad_len)
         self._seq = 0
         self._t0: Optional[float] = None
+        # cache-aware ordering may prefer hits over the queue head, but
+        # never more than this many consecutive admissions (bounded
+        # head-of-line starvation; FIFO order bounds everyone behind it)
+        self._bypass_limit = 8
+        self._head_bypassed = 0
+
+    def fresh_state(self) -> None:
+        """Reset for a new serving phase (back-to-back benchmark runs).
+
+        Rebuilds the engine state — which, for a paged engine, also
+        rebuilds the page pool and radix index — and resets *all*
+        scheduler bookkeeping with it: queue, slot pool, responses and
+        the stats counters ``prefix_stats()`` reads.  Without the stat
+        reset a second phase on the same scheduler would report the
+        previous phase's hits folded into its own (stale hit-rates).
+        """
+        self.state = self.engine.fresh_state(self.capacity)
+        self.pool = SlotPool(self.capacity)
+        self.queue.clear()
+        self.stats = EngineStats()
+        self.responses = {}
+        self.engine_steps = 0
+        self._partial = {}
+        self._steps_taken[:] = 0
+        self._budget[:] = 0
+        self._t0 = None
+        self._head_bypassed = 0
 
     # ------------------------------------------------------------------
     # Submission / admission control
@@ -159,6 +207,35 @@ class GSIScheduler:
     def _ready(self, now: float) -> bool:
         return bool(self.queue) and self.queue[0].arrival_time <= now
 
+    def _pick_ready(self, now: float):
+        """Pick the next request to admit.
+
+        Returns ``(queue_index, shared_pages, hit_tokens)`` — the match
+        is computed here once and reused by the admission path, so each
+        candidate costs exactly one host-side trie walk.
+
+        FIFO by default.  With ``cache_aware=True``, the *arrived*
+        request with the longest live radix prefix match wins (cache-
+        aware admission ordering: a hit admitted now skips prefill and
+        pins its matched pages before anything can evict them); arrival
+        order breaks ties, so equal-match requests still admit FIFO.
+        The head request is never bypassed more than ``_bypass_limit``
+        consecutive admissions — a bounded-starvation guarantee that
+        holds even against an endless stream of fresher cache hits.
+        """
+        head = self.queue[0]
+        if not self.cache_aware or len(self.queue) <= 1 \
+                or self._head_bypassed >= self._bypass_limit:
+            return (0,) + self.engine.match_prefix(head.prompt)
+        best = None
+        for i, req in enumerate(self.queue):
+            if req.arrival_time > now:
+                break                  # queue is arrival-ordered
+            shared, hit = self.engine.match_prefix(req.prompt)
+            if best is None or hit > best[2]:
+                best = (i, shared, hit)
+        return best
+
     def _admit_ready(self, now: float) -> List[str]:
         """Move arrived requests from the queue into free slots.
 
@@ -178,12 +255,16 @@ class GSIScheduler:
         batch: Dict[int, Request] = {}
         starts = np.zeros((self.capacity,), np.int32)
         while free and self._ready(now):
-            req = self.queue[0]
-            shared, hit_tok = self.engine.match_prefix(req.prompt)
+            pick, shared, hit_tok = self._pick_ready(now)
+            req = self.queue[pick]
             if not self.engine.admit_ok(req.prompt.size, req.max_steps,
                                         shared=shared):
                 break                      # out of pages: defer, keep order
-            self.queue.popleft()
+            if pick:
+                self._head_bypassed += 1
+            else:
+                self._head_bypassed = 0
+            del self.queue[pick]
             slot = free.pop(0)
             self.engine.claim_slot(slot, req.prompt.size, req.max_steps,
                                    shared=shared)

@@ -38,6 +38,7 @@ class SlotPool:
     slot_request: List[Optional[str]] = field(default=None)
 
     def __post_init__(self):
+        """Start all-free and build the O(1) request-id -> slot map."""
         if self.slot_request is None:
             self.slot_request = [None] * self.capacity
         assert len(self.slot_request) == self.capacity
@@ -48,27 +49,34 @@ class SlotPool:
 
     # -- queries -------------------------------------------------------
     def free_slots(self) -> List[int]:
+        """Slot indices currently holding no request (ascending)."""
         return [i for i, r in enumerate(self.slot_request) if r is None]
 
     def live_slots(self) -> List[int]:
+        """Slot indices currently occupied by a request (ascending)."""
         return [i for i, r in enumerate(self.slot_request) if r is not None]
 
     @property
     def num_free(self) -> int:
+        """Number of free slots."""
         return len(self.free_slots())
 
     @property
     def num_live(self) -> int:
+        """Number of occupied (decoding) slots."""
         return self.capacity - self.num_free
 
     def request_of(self, slot: int) -> Optional[str]:
+        """Request id occupying ``slot`` (None when free)."""
         return self.slot_request[slot]
 
     def slot_of(self, request_id: str) -> Optional[int]:
+        """Slot a live request occupies (None when not live); O(1)."""
         return self._slot_of.get(request_id)
 
     # -- transitions ---------------------------------------------------
     def claim(self, slot: int, request_id: str) -> None:
+        """Bind a request id to a free slot (raises if occupied)."""
         if self.slot_request[slot] is not None:
             raise ValueError(f"slot {slot} already holds "
                              f"{self.slot_request[slot]!r}")
@@ -76,6 +84,7 @@ class SlotPool:
         self._slot_of[request_id] = slot
 
     def release(self, slot: int) -> str:
+        """Free an occupied slot; returns the request id it held."""
         rid = self.slot_request[slot]
         if rid is None:
             raise ValueError(f"slot {slot} is already free")

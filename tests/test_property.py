@@ -185,3 +185,78 @@ def test_page_pool_invariants_under_interleavings(data):
     pool.evict(num_pages)
     _check_pool(pool)
     assert pool.num_free == pool.num_pages
+
+
+@settings(deadline=None, max_examples=25)
+@given(data=st.data())
+def test_per_replica_page_conservation_under_routed_admission(data):
+    """Router scale-out invariant: replicas share no pages, so routed
+    admission — each request's claim/ensure/publish landing on the pool
+    the (real) affinity function picks — must preserve every replica's
+    ledger invariants independently, under arbitrary interleaving with
+    releases and evictions on other replicas."""
+    from repro.serving.router import preamble_hash
+
+    n_replicas = data.draw(st.integers(2, 3), label="replicas")
+    pools = [PagePool(data.draw(st.integers(3, 10), label=f"pages{i}"),
+                      PS, index=RadixIndex(PS))
+             for i in range(n_replicas)]
+    next_slot = [0]
+
+    def route(toks):
+        """The router's placement tiers over bare pools: longest cached
+        radix match first, then the first-chunk hash."""
+        best, best_len = None, 0
+        for i, pool in enumerate(pools):
+            _, m = pool.match(toks[:(len(toks) - 1) // PS * PS])
+            if m > best_len:
+                best, best_len = i, m
+        if best is not None:
+            return best
+        return preamble_hash(toks[:PS], n_replicas)
+
+    def live_slots(pool):
+        return sorted(pool.assigned)
+
+    def op_routed_claim():
+        toks = data.draw(
+            st.lists(st.integers(1, 3), min_size=PS, max_size=PS * 4),
+            label="prompt")
+        pool = pools[route(toks)]
+        shared, _ = pool.match(toks[:(len(toks) - 1) // PS * PS])
+        need = pages_for(len(toks) + 1, PS) - len(shared)
+        if not pool.can_claim(need, shared):
+            return                   # this replica defers; others untouched
+        slot = next_slot[0]
+        next_slot[0] += 1
+        pool.claim(slot, need, shared=shared)
+        pool.ensure(slot, pages_for(len(toks), PS))
+        full = (len(toks) - 1) // PS
+        if full:
+            pool.publish(toks[:full * PS], pool.assigned[slot][:full])
+
+    def op_release():
+        candidates = [(i, s) for i, p in enumerate(pools)
+                      for s in live_slots(p)]
+        if not candidates:
+            return
+        i, slot = data.draw(st.sampled_from(candidates), label="release")
+        pools[i].release(slot)
+
+    def op_evict():
+        i = data.draw(st.integers(0, n_replicas - 1), label="evict_pool")
+        pools[i].evict(data.draw(st.integers(1, pools[i].num_pages),
+                                 label="evict_n"))
+
+    ops = {"claim": op_routed_claim, "release": op_release,
+           "evict": op_evict}
+    for _ in range(data.draw(st.integers(1, 25), label="steps")):
+        ops[data.draw(st.sampled_from(sorted(ops)), label="op")]()
+        for pool in pools:
+            _check_pool(pool)
+    # drain the whole fleet: every replica back to free + cached only
+    for pool in pools:
+        for slot in live_slots(pool):
+            pool.release(slot)
+            _check_pool(pool)
+        assert pool.num_free + pool.num_cached == pool.num_pages

@@ -1,0 +1,303 @@
+"""Multi-replica router: placement, assembly, identity, cache-aware admission.
+
+Layers of coverage:
+  * Affinity placement is deterministic (hash tier is process-stable) and
+    groups same-preamble requests onto one replica; the trie tier routes
+    to the replica already holding a prompt's pages.
+  * Least-loaded fallback under the skew guard spreads a hot preamble.
+  * Responses are assembled id-keyed across replicas under out-of-order
+    completion.
+  * Greedy decoding: single-replica == multi-replica token identity
+    (routing is a placement change, never an algorithm change).
+  * Cache-aware admission ordering admits radix hits before cold prompts.
+  * ``fresh_state()`` resets prefix counters with the radix index
+    (the stale-hit-rate fix) on both scheduler and router.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig
+from repro.models import build_model
+from repro.serving import (GSIScheduler, GSIServingEngine, ReplicaRouter,
+                           build_replicas, merge_engine_stats,
+                           preamble_hash)
+from repro.serving.gsi_engine import EngineStats
+
+PAD = 0
+
+# page_size=8 below: 2 full pages of preamble + 1 spill token
+PRE_A = np.asarray([5 + (i % 24) for i in range(17)], np.int32)
+PRE_B = np.asarray([30 + (i % 20) for i in range(17)], np.int32)
+
+
+def _prompt(pre, tail):
+    return np.concatenate([pre, np.asarray(tail, np.int32)])
+
+
+@pytest.fixture(scope="module")
+def triple(tiny_triple):
+    draft, target, prm = tiny_triple
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+@pytest.fixture(scope="module")
+def gcfg():
+    # temperature=0 (greedy): a request's trajectory is a function of its
+    # prompt + budget only — independent of slot, step count, rng and
+    # batch composition — which is what makes single- vs multi-replica
+    # token identity assertable at all
+    return GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                     min_step_reward=-1.0, temperature=0.0)
+
+
+def _engine(triple, gcfg, **kw):
+    (cfgs, params) = triple
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", 8)
+    return GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, **kw)
+
+
+# ----------------------------------------------------------------------
+# Placement
+# ----------------------------------------------------------------------
+
+def test_preamble_hash_deterministic_and_spread():
+    chunk = list(range(16))
+    assert preamble_hash(chunk, 4) == preamble_hash(np.asarray(chunk), 4)
+    assert 0 <= preamble_hash(chunk, 4) < 4
+    # different chunks do not all collapse onto one replica
+    assert len({preamble_hash([c] * 16, 7) for c in range(1, 30)}) > 1
+
+
+def test_affinity_groups_by_preamble_and_is_deterministic(triple, gcfg):
+    prompts = [_prompt(PRE_A, [33, 34, 4]), _prompt(PRE_B, [35, 36, 4]),
+               _prompt(PRE_A, [37, 38, 4]), _prompt(PRE_B, [39, 40, 4]),
+               _prompt(PRE_A, [41, 42, 4]), _prompt(PRE_B, [43, 44, 4])]
+    placements = []
+    for _ in range(2):
+        router = ReplicaRouter([_engine(triple, gcfg),
+                                _engine(triple, gcfg)],
+                               capacity=1, policy="affinity", skew=None)
+        ids = [router.submit(p) for p in prompts]
+        placements.append([router.replica_of(r) for r in ids])
+    # deterministic run-to-run
+    assert placements[0] == placements[1]
+    # every request of a preamble group lands on one replica
+    a_slots = {placements[0][i] for i in (0, 2, 4)}
+    b_slots = {placements[0][i] for i in (1, 3, 5)}
+    assert len(a_slots) == 1 and len(b_slots) == 1
+
+
+def test_affinity_trie_tier_routes_to_cached_replica(triple, gcfg):
+    router = ReplicaRouter([_engine(triple, gcfg), _engine(triple, gcfg)],
+                           capacity=1, policy="affinity", skew=None)
+    rid = router.submit(_prompt(PRE_A, [33, 34, 4]), max_steps=1)
+    home = router.replica_of(rid)
+    router.run(jax.random.PRNGKey(0))
+    # preamble pages are now published on the home replica: the next
+    # same-preamble request must match the trie (not just the hash)
+    before = router.routing["affinity_matched"]
+    assert router.route(_prompt(PRE_A, [35, 36, 4])) == home
+    assert router.routing["affinity_matched"] == before + 1
+
+
+def test_least_loaded_fallback_under_skew(triple, gcfg):
+    router = ReplicaRouter([_engine(triple, gcfg), _engine(triple, gcfg)],
+                           capacity=1, policy="affinity", skew=0)
+    ids = [router.submit(_prompt(PRE_A, [33 + i, 34, 4])) for i in range(4)]
+    placements = [router.replica_of(r) for r in ids]
+    # skew=0: a replica may never lead by more than 0 at placement time,
+    # so the hot preamble is spread across both replicas
+    assert set(placements) == {0, 1}
+    assert router.routing["fallback_load"] >= 1
+
+
+def test_short_prompt_routes_least_loaded(triple, gcfg):
+    router = ReplicaRouter([_engine(triple, gcfg), _engine(triple, gcfg)],
+                           capacity=1, policy="affinity")
+    # < 1 full page of shareable prefix: nothing to be affine to
+    a = router.submit(np.asarray([5, 6, 4], np.int32))
+    b = router.submit(np.asarray([7, 8, 4], np.int32))
+    assert {router.replica_of(a), router.replica_of(b)} == {0, 1}
+    assert router.routing["fallback_load"] == 2
+
+
+def test_round_robin_cycles_and_duplicate_ids_rejected(triple, gcfg):
+    router = ReplicaRouter([_engine(triple, gcfg), _engine(triple, gcfg)],
+                           capacity=1, policy="round_robin")
+    ids = [router.submit(_prompt(PRE_A, [33 + i, 34, 4]))
+           for i in range(4)]
+    assert [router.replica_of(r) for r in ids] == [0, 1, 0, 1]
+    with pytest.raises(ValueError):
+        router.submit(_prompt(PRE_A, [4]), request_id=ids[0])
+    # generated ids skip ids a caller claimed explicitly
+    router.submit(_prompt(PRE_A, [4]), request_id="req-4")
+    nxt = router.submit(_prompt(PRE_A, [4]))
+    assert nxt == "req-5"
+
+
+def test_replicas_must_not_share_engines(triple, gcfg):
+    eng = _engine(triple, gcfg)
+    with pytest.raises(ValueError):
+        build_replicas([eng, eng], capacity=1)
+
+
+# ----------------------------------------------------------------------
+# Assembly + identity
+# ----------------------------------------------------------------------
+
+def test_out_of_order_assembly_across_replicas(triple, gcfg):
+    router = ReplicaRouter([_engine(triple, gcfg), _engine(triple, gcfg)],
+                           capacity=1, policy="round_robin")
+    budgets = {"long": 3, "s1": 1, "s2": 1, "s3": 1}
+    for rid, b in budgets.items():
+        router.submit(_prompt(PRE_A, [33, 34, 4]), request_id=rid,
+                      max_steps=b)
+    out = router.run(jax.random.PRNGKey(7))
+    assert set(out) == set(budgets)
+    for rid, b in budgets.items():
+        assert out[rid].engine_steps == b, rid
+        assert out[rid].finish_reason in ("max_steps", "eos", "low_reward")
+    # short requests time-share replica 1 while "long" holds replica 0
+    assert {router.replica_of(r) for r in budgets} == {0, 1}
+    assert router.stats.requests_finished == 4
+
+
+def test_single_replica_equals_multi_replica_tokens(triple, gcfg):
+    prompts = [_prompt(PRE_A, [33, 34, 4]), _prompt(PRE_A, [35, 36, 4]),
+               _prompt(PRE_B, [37, 38, 4]), _prompt(PRE_B, [39, 40, 4])]
+    budgets = [1, 2, 1, 2]
+
+    sched = GSIScheduler(_engine(triple, gcfg), capacity=1)
+    ids = [sched.submit(p, request_id=f"r{i}", max_steps=budgets[i])
+           for i, p in enumerate(prompts)]
+    single = {r: resp.tokens.tolist()
+              for r, resp in sched.run(jax.random.PRNGKey(3)).items()}
+
+    for policy in ("affinity", "least_loaded"):
+        router = ReplicaRouter([_engine(triple, gcfg),
+                                _engine(triple, gcfg)],
+                               capacity=1, policy=policy, skew=None)
+        for i, p in enumerate(prompts):
+            router.submit(p, request_id=f"r{i}", max_steps=budgets[i])
+        multi = {r: resp.tokens.tolist()
+                 for r, resp in router.run(jax.random.PRNGKey(91)).items()}
+        assert multi == single, policy
+    assert set(single) == set(ids)
+
+
+def test_merge_engine_stats_sums_and_moments():
+    a, b = EngineStats(), EngineStats()
+    a.steps, b.steps = 3, 4
+    a.prefix_hits, b.prefix_hits = 1, 2
+    a.prefix_queries, b.prefix_queries = 2, 4
+    a.record_trace("raw_rewards", np.asarray([1.0, 2.0]))
+    b.record_trace("raw_rewards", np.asarray([3.0, 4.0, 5.0]))
+    m = merge_engine_stats([a, b])
+    assert m.steps == 7 and m.prefix_hits == 3 and m.prefix_queries == 6
+    assert m.prefix_hit_rate == 0.5
+    assert m.trace_count("raw_rewards") == 5
+    np.testing.assert_allclose(m.trace_mean("raw_rewards"), 3.0)
+    np.testing.assert_allclose(m.trace_var("raw_rewards"), 2.0)
+    # inputs untouched
+    assert a.steps == 3 and len(a.raw_rewards) == 1
+
+
+# ----------------------------------------------------------------------
+# Cache-aware admission ordering
+# ----------------------------------------------------------------------
+
+def _drain(sched, rid, rng):
+    while rid not in sched.responses:
+        rng, k = jax.random.split(rng)
+        sched.step(k)
+    return rng
+
+
+@pytest.mark.parametrize("cache_aware,first", [(True, "hit"),
+                                               (False, "cold")])
+def test_cache_aware_admission_prefers_radix_hits(triple, gcfg,
+                                                  cache_aware, first):
+    sched = GSIScheduler(_engine(triple, gcfg), capacity=1,
+                         cache_aware=cache_aware)
+    warm = sched.submit(_prompt(PRE_A, [33, 34, 4]), max_steps=1)
+    rng = _drain(sched, warm, jax.random.PRNGKey(5))
+    assert sched.engine.pager.num_cached > 0
+    # cold (different preamble) submitted BEFORE the hit
+    sched.submit(_prompt(PRE_B, [35, 36, 4]), request_id="cold",
+                 max_steps=1)
+    sched.submit(_prompt(PRE_A, [37, 38, 4]), request_id="hit",
+                 max_steps=1)
+    rng, k = jax.random.split(rng)
+    done = sched.step(k)
+    # budget 1: whichever request was admitted first also finished first
+    assert [r.request_id for r in done] == [first]
+    _drain(sched, "cold", rng)
+    _drain(sched, "hit", rng)
+    assert set(sched.responses) == {warm, "cold", "hit"}
+
+
+def test_cache_aware_bypass_is_bounded(triple, gcfg):
+    """An endless supply of fresher cache hits must not starve a cold
+    head-of-queue request: after ``_bypass_limit`` consecutive bypassed
+    admissions the head is forced through."""
+    sched = GSIScheduler(_engine(triple, gcfg), capacity=1,
+                         cache_aware=True)
+    sched._bypass_limit = 2                  # keep the test short
+    warm = sched.submit(_prompt(PRE_A, [33, 34, 4]), max_steps=1)
+    rng = _drain(sched, warm, jax.random.PRNGKey(9))
+    sched.submit(_prompt(PRE_B, [35, 36, 4]), request_id="cold",
+                 max_steps=1)
+    for i in range(4):
+        sched.submit(_prompt(PRE_A, [40 + i, 34, 4]),
+                     request_id=f"hit{i}", max_steps=1)
+    order = []
+    while len(sched.responses) < 6:
+        rng, k = jax.random.split(rng)
+        order.extend(r.request_id for r in sched.step(k))
+    # two hits bypass the cold head, then the bound forces it through
+    assert order[:3] == ["hit0", "hit1", "cold"]
+
+
+# ----------------------------------------------------------------------
+# fresh_state: stale-counter fix
+# ----------------------------------------------------------------------
+
+def test_scheduler_fresh_state_resets_prefix_counters(triple, gcfg):
+    sched = GSIScheduler(_engine(triple, gcfg), capacity=1)
+    for i in range(2):
+        sched.submit(_prompt(PRE_A, [33 + i, 34, 4]), max_steps=1)
+    sched.run(jax.random.PRNGKey(1))
+    st = sched.prefix_stats()
+    assert st["queries"] == 2 and st["hits"] == 1
+    sched.fresh_state()
+    st = sched.prefix_stats()
+    assert st["queries"] == 0 and st["hits"] == 0
+    assert st["pages_cached"] == 0 and st["prefill_tokens"] == 0
+    assert sched.engine_steps == 0 and not sched.responses
+    # the scheduler is immediately servable again, from a cold cache
+    rid = sched.submit(_prompt(PRE_A, [39, 40, 4]), max_steps=1)
+    out = sched.run(jax.random.PRNGKey(2))
+    assert rid in out
+    assert sched.prefix_stats()["queries"] == 1
+    assert sched.prefix_stats()["hits"] == 0     # cache really was cold
+
+
+def test_router_fresh_state_resets_fleet(triple, gcfg):
+    router = ReplicaRouter([_engine(triple, gcfg), _engine(triple, gcfg)],
+                           capacity=1, policy="affinity", skew=None)
+    for i in range(2):
+        router.submit(_prompt(PRE_A, [33 + i, 34, 4]), max_steps=1)
+    router.run(jax.random.PRNGKey(1))
+    assert router.prefix_stats()["queries"] == 2
+    router.fresh_state()
+    st = router.prefix_stats()
+    assert st["queries"] == 0 and st["hits"] == 0
+    assert router.engine_steps == 0 and not router.responses
+    assert all(v == 0 for v in router.routing.values())
+    rid = router.submit(_prompt(PRE_A, [39, 40, 4]), max_steps=1)
+    assert rid in router.run(jax.random.PRNGKey(2))
