@@ -13,6 +13,13 @@ the *same* engine and jitted step functions:
     continuous   scheduler with ``continuous=True`` — finished slots are
                  freed and the next queued prompt is admitted on the
                  following engine step.
+    continuous_async  the same continuous scheduler with ``sync=False``:
+                 one step ticket stays in flight and the previous step's
+                 harvest + admission overlap the device execution.
+                 ``--check`` asserts the pipeline is a pure re-ordering:
+                 token streams bit-identical to ``continuous`` (same rng
+                 keys per engine step, same slots), no more engine steps,
+                 and a host/device overlap fraction > 0.
 
 Every discipline decodes identical (capacity, ...) shapes, so per-step
 cost is constant and the measured difference is pure scheduling.
@@ -92,9 +99,10 @@ def run_fixed(engine, problems, rng, *, capacity, pad_len=0):
 
 
 def run_sched(engine, problems, rng, *, capacity, continuous,
-              budgets=None):
+              budgets=None, sync=True):
     sched = GSIScheduler(engine, capacity=capacity,
-                         continuous=continuous, prompt_pad_len=16)
+                         continuous=continuous, prompt_pad_len=16,
+                         sync=sync)
     ids = []
     for i, p in enumerate(problems):
         ids.append(sched.submit(
@@ -108,6 +116,7 @@ def run_sched(engine, problems, rng, *, capacity, continuous,
             "latencies": [results[r].latency for r in ids],
             "engine_steps": sched.engine_steps,
             "prefix": sched.prefix_stats(),
+            "pipeline": sched.pipeline_stats(),
             "token_lists": [results[r].tokens.tolist() for r in ids]}
 
 
@@ -207,6 +216,25 @@ def run(fast: bool = False, *, check: bool = False,
                      continuous=True, budgets=budgets)
     tps_cont = _row("continuous_budgeted", cont)
 
+    # async pipeline on the same dense budgeted workload: one step ticket
+    # in flight, harvest/admission overlapped with device decode.  The
+    # pipeline preserves per-step rng keys, slot bindings and admission
+    # order, so (even at sampling temperature > 0) the token streams must
+    # be bit-identical to the synchronous run in no more engine steps.
+    cont_async = run_sched(engine2, problems, rng, capacity=capacity,
+                           continuous=True, budgets=budgets, sync=False)
+    tps_cont_async = _row("continuous_async", cont_async)
+    pipe = cont_async["pipeline"]
+    common.emit(
+        "throughput/async_overlap", 0.0,
+        f"overlap_fraction={pipe['overlap_fraction']:.3f};"
+        f"overlap_host_ms={pipe['overlap_host_s'] * 1e3:.1f};"
+        f"serial_host_ms={pipe['serial_host_s'] * 1e3:.1f};"
+        f"materialize_wait_ms={pipe['materialize_wait_s'] * 1e3:.1f};"
+        f"async_steps={cont_async['engine_steps']};"
+        f"sync_steps={cont['engine_steps']};"
+        f"async_vs_sync={tps_cont_async / tps_cont:.2f}x")
+
     common.emit("throughput/speedup", 0.0,
                 f"continuous_vs_fixed_run={tps_cont_eos / tps_fixed:.2f}x;"
                 f"continuous_vs_gang={tps_cont / tps_gang:.2f}x;"
@@ -261,6 +289,12 @@ def run(fast: bool = False, *, check: bool = False,
     pfx_on = run_sched(engine_paged, shared, rng, capacity=capacity,
                        continuous=True)
     _row("shared_prefix_on", pfx_on)
+    # async over paged + prefix cache: radix lookups, page claims and
+    # eviction all ride the pipelined host loop — placement, hits and
+    # tokens must stay bit-identical to the synchronous run
+    pfx_async = run_sched(engine_paged, shared, rng, capacity=capacity,
+                          continuous=True, sync=False)
+    _row("shared_prefix_async", pfx_async)
     pstat = pfx_on["prefix"]
     common.emit(
         "throughput/prefix_cache", 0.0,
@@ -315,8 +349,11 @@ def run(fast: bool = False, *, check: bool = False,
     # skew=None: pure affinity for a deterministic hit-rate comparison.
     # Warm the router, then fresh_state() — the timed phase must start
     # from empty caches AND zeroed counters (the stale-hit-rate fix).
+    # threaded=False: the affinity/round-robin rows are the *sequential*
+    # baselines the threaded async fleet row is compared against
     aff_router = ReplicaRouter(replica_engines, capacity=1,
-                               policy="affinity", skew=None)
+                               policy="affinity", skew=None,
+                               threaded=False)
     for i, p in enumerate(mr_prompts[:2]):
         aff_router.submit(p, request_id=f"warm-{i}", max_steps=1)
     aff_router.run(jax.random.PRNGKey(3))
@@ -325,8 +362,16 @@ def run(fast: bool = False, *, check: bool = False,
     # same engines, new router: each replica scheduler rebuilds its
     # engine state (page pool + radix index reset, jits reused)
     rr_router = ReplicaRouter(replica_engines, capacity=1,
-                              policy="round_robin")
+                              policy="round_robin", threaded=False)
     mr_rr = mr_run(rr_router, "replicas2_round_robin")
+    # async fleet: thread-per-replica loop driving pipelined schedulers
+    # (each replica owns its engine/state/pool, so threads share no
+    # device state).  Greedy decoding again: tokens must be identical
+    # whatever the thread schedule.
+    async_router = ReplicaRouter(replica_engines, capacity=1,
+                                 policy="affinity", skew=None,
+                                 sync=False, threaded=True)
+    mr_async = mr_run(async_router, "replicas2_async")
     aps, rps = mr_aff["prefix"], mr_rr["prefix"]
     common.emit(
         "throughput/replica_routing", 0.0,
@@ -367,12 +412,31 @@ def run(fast: bool = False, *, check: bool = False,
         assert pstat["prefill_tokens"] < \
             pfx_off["prefix"]["prefill_tokens"], \
             "prefix sharing must commit strictly fewer prefill tokens"
+        # the async pipeline is a re-ordering of host work, not an
+        # algorithm change: bit-identical tokens on the dense budgeted
+        # workload (sampling temperature > 0 — the strictest possible
+        # rng/slot/admission parity check) and on paged + prefix cache,
+        # in no more engine steps, with real host/device overlap
+        assert cont_async["token_lists"] == cont["token_lists"], \
+            "async pipeline drifted: continuous_async tokens != sync"
+        assert cont_async["engine_steps"] <= cont["engine_steps"], \
+            f"async used more engine steps ({cont_async['engine_steps']}" \
+            f" > {cont['engine_steps']})"
+        assert pfx_async["token_lists"] == pfx_on["token_lists"], \
+            "async pipeline drifted on the paged+prefix workload"
+        assert pfx_async["engine_steps"] <= pfx_on["engine_steps"], \
+            "async used more engine steps on the paged+prefix workload"
+        assert pipe["overlap_fraction"] > 0, \
+            "async pipeline reported zero host/device overlap"
         # multi-replica serving is a placement change, not an algorithm
         # change: under greedy decoding every routing must reproduce the
-        # single-replica token streams request-for-request
+        # single-replica token streams request-for-request — including
+        # the thread-per-replica async fleet loop
         assert mr_single["token_lists"] == mr_aff["token_lists"] \
             == mr_rr["token_lists"], \
             "multi-replica routing drifted from the single-replica run"
+        assert mr_async["token_lists"] == mr_single["token_lists"], \
+            "async fleet loop drifted from the single-replica run"
         # preamble affinity must beat locality-blind round-robin on
         # aggregate radix hit-rate for the grouped-preamble workload
         assert aps["hit_rate"] > rps["hit_rate"], \
@@ -395,9 +459,12 @@ def main():
                     help="assert continuous < gang engine steps, paged == "
                          "dense tokens, paged scratch < dense at n=4, "
                          "prefix sharing: identical tokens, hit-rate > 0, "
-                         "strictly fewer prefill commits, and multi-"
-                         "replica: single == routed tokens, affinity "
-                         "hit-rate > round-robin")
+                         "strictly fewer prefill commits, multi-replica: "
+                         "single == routed tokens, affinity hit-rate > "
+                         "round-robin, and async pipeline: sync == async "
+                         "tokens bit-identically (dense and paged+prefix, "
+                         "1 and 2 replicas), no more engine steps, "
+                         "overlap fraction > 0")
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--requests", type=int, default=0)
     args = ap.parse_args()

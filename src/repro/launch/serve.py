@@ -5,11 +5,15 @@ throughput / latency-model numbers.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16 --n 4 \
         --method gsi --capacity 8 [--train-steps 300] \
-        [--paged --replicas 2 --router affinity]
+        [--paged --replicas 2 --router affinity] [--sync | --async]
 
 ``--replicas N`` serves through N data-parallel replicas (one engine,
-page pool and radix index each) behind the preamble-affinity router;
-see docs/SERVING.md for the full flag reference.
+page pool and radix index each) behind the preamble-affinity router.
+Serving is asynchronous by default (``--async``): each scheduler keeps
+one decode step in flight and overlaps harvest/admission with device
+execution, and replicas are driven by a thread-per-replica fleet loop;
+``--sync`` selects the lock-step loop (bit-identical tokens).  See
+docs/SERVING.md for the full flag reference.
 """
 from __future__ import annotations
 
@@ -23,7 +27,7 @@ import numpy as np
 from repro.config import GSIConfig, ModelConfig, TrainConfig
 from repro.data import SyntheticReasoningTask, PAD
 from repro.serving import GSIScheduler, GSIServingEngine, ReplicaRouter
-from repro.serving.router import POLICIES
+from repro.serving.router import HASH_TIERS, POLICIES
 from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
 from repro.train import Trainer
 
@@ -75,37 +79,46 @@ def evaluate(engine, task, problems, rng):
 
 
 def make_frontend(engines, *, capacity: int, continuous: bool = True,
-                  collect_stats: bool = False, policy: str = "affinity"):
+                  collect_stats: bool = False, policy: str = "affinity",
+                  sync: bool = True, hash_tier: str = "mod"):
     """One serving frontend over one or many engines.
 
     A single engine (or a 1-list) gets a plain :class:`GSIScheduler`;
     a list of N > 1 engines gets a :class:`ReplicaRouter` fronting N
-    replicas of ``capacity`` slots each, routed by ``policy``.  Both
-    expose the same submit()/run()/stats/prefix_stats() surface.
+    replicas of ``capacity`` slots each, routed by ``policy`` (tier-2
+    preamble hashing per ``hash_tier``).  ``sync=False`` selects the
+    pipelined decode loop (and, for routers, the thread-per-replica
+    fleet loop).  Both frontends expose the same
+    submit()/run()/stats/prefix_stats()/pipeline_stats() surface.
     """
     if isinstance(engines, GSIServingEngine):
         engines = [engines]
     if len(engines) == 1:
         return GSIScheduler(engines[0], capacity=capacity,
                             continuous=continuous,
-                            collect_stats=collect_stats)
+                            collect_stats=collect_stats, sync=sync)
     return ReplicaRouter(engines, capacity=capacity, policy=policy,
                          continuous=continuous,
-                         collect_stats=collect_stats)
+                         collect_stats=collect_stats, sync=sync,
+                         threaded=not sync, hash_tier=hash_tier)
 
 
 def evaluate_queued(engine, task, problems, rng, *, capacity: int,
-                    continuous: bool = True, policy: str = "affinity"):
+                    continuous: bool = True, policy: str = "affinity",
+                    sync: bool = True, hash_tier: str = "mod"):
     """Queued evaluation through the continuous-batching scheduler.
 
     All requests are submitted up front (offered load >= capacity); the
     scheduler packs them onto ``capacity`` slots, re-admitting queued
     prompts into freed slots.  ``engine`` may also be a list of engines —
     one per data-parallel replica, fronted by a :class:`ReplicaRouter`
-    with ``policy`` placement.  Returns accuracy plus throughput/latency.
+    with ``policy`` placement.  ``sync=False`` serves through the async
+    pipeline (identical tokens, overlapped host work).  Returns accuracy
+    plus throughput/latency.
     """
     sched = make_frontend(engine, capacity=capacity, continuous=continuous,
-                          collect_stats=True, policy=policy)
+                          collect_stats=True, policy=policy, sync=sync,
+                          hash_tier=hash_tier)
     ids = [sched.submit(np.asarray(p.prompt, np.int32)) for p in problems]
     t0 = time.time()
     results = sched.run(rng)
@@ -125,6 +138,7 @@ def evaluate_queued(engine, task, problems, rng, *, capacity: int,
             "latency_p50": float(np.percentile(lat, 50)),
             "latency_p95": float(np.percentile(lat, 95)),
             "prefix": sched.prefix_stats(),
+            "pipeline": sched.pipeline_stats(),
             "stats": sched.stats, "responses": results}
 
 
@@ -158,6 +172,18 @@ def main() -> None:
     ap.add_argument("--router", default="affinity", choices=list(POLICIES),
                     help="replica placement policy (preamble-affinity "
                          "keeps shared-prefix requests on one replica)")
+    ap.add_argument("--hash-tier", default="mod", choices=list(HASH_TIERS),
+                    help="affinity tier-2 preamble hash: mod (blake2b "
+                         "mod N) or rendezvous (adding a replica remaps "
+                         "only ~1/N of preamble groups)")
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--async", dest="sync", action="store_false",
+                     help="pipelined serving (default): one step ticket "
+                          "in flight, harvest/admission overlap device "
+                          "decode; thread-per-replica fleet loop")
+    grp.add_argument("--sync", dest="sync", action="store_true",
+                     help="lock-step serving loop (identical tokens)")
+    ap.set_defaults(sync=False)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -188,7 +214,8 @@ def main() -> None:
                           task, problems,
                           jax.random.PRNGKey(args.seed + 1),
                           capacity=capacity, continuous=not args.gang,
-                          policy=args.router)
+                          policy=args.router, sync=args.sync,
+                          hash_tier=args.hash_tier)
     if args.paged:
         rep = engine.cache_memory_report(capacity)
         print(f"paged cache: {rep['num_pages']} pages x "
@@ -208,8 +235,16 @@ def main() -> None:
                       f"hit_rate={p['hit_rate']:.2f} "
                       f"({p['hits']}/{p['queries']} admissions) "
                       f"prefill_tokens={p['prefill_tokens']}")
+    if not args.sync:
+        pipe = res["pipeline"]
+        print(f"async pipeline: overlap_fraction="
+              f"{pipe['overlap_fraction']:.2f} "
+              f"overlap_host={pipe['overlap_host_s']*1e3:.0f}ms "
+              f"serial_host={pipe['serial_host_s']*1e3:.0f}ms "
+              f"materialize_wait={pipe['materialize_wait_s']*1e3:.0f}ms")
     print(f"method={args.method} n={args.n} capacity={capacity} "
-          f"({'gang' if args.gang else 'continuous'}"
+          f"({'async' if not args.sync else 'sync'}, "
+          f"{'gang' if args.gang else 'continuous'}"
           f"{', paged' if args.paged else ''}"
           f"{f', {args.replicas} replicas/{args.router}' if args.replicas > 1 else ''}): "
           f"accuracy={res['accuracy']:.3f} "

@@ -19,13 +19,15 @@ from repro.serving.engine import (branch_cache, branch_pages,  # noqa: F401
                                   paged_view, repeat_cache,
                                   reset_cache_rows, take_candidates)
 from repro.serving.gsi_engine import (GSIServingEngine, EngineStats,  # noqa: F401
-                                      StepResult, merge_engine_stats)
+                                      StepResult, StepTicket,
+                                      merge_engine_stats)
 from repro.serving.latency import LatencyModel, HW_V5E  # noqa: F401
 from repro.serving.pages import (PagePool, RadixIndex,  # noqa: F401
                                  pages_for)
 from repro.serving.replica import Replica, build_replicas  # noqa: F401
 from repro.serving.router import (ReplicaRouter, POLICIES,  # noqa: F401
-                                  preamble_hash)
+                                  HASH_TIERS, preamble_hash,
+                                  preamble_rendezvous)
 from repro.serving.scheduler import (GSIScheduler, Request,  # noqa: F401
                                      Response)
 from repro.serving.slots import (SlotPool, pack_prompts,  # noqa: F401

@@ -15,10 +15,22 @@ The same engine, re-parameterized, implements every baseline of the paper:
 RSD (raw rewards + threshold), S-BoN(draft), S-BoN(base), and the
 "GSI w/o rejection" ablation.  Host-side loop + jitted phases; per-request
 divergence handled with live-masking (PAD) rather than re-batching.
+
+The decode step is split into an asynchronous pipeline pair:
+``dispatch_decode`` enqueues one whole engine step (draft phase, the
+rejection-fallback target phase under a device-side ``lax.cond``, commit
+and the done fold) as a single jitted computation and returns an in-flight
+:class:`StepTicket` of device arrays without ever blocking the host, and
+``materialize`` transfers the finished ticket to host numpy in one batched
+``device_get``.  ``step_decode`` is exactly ``dispatch`` + ``materialize``
+back-to-back, so the synchronous and pipelined schedulers run the same
+compiled computation with the same rng keys — async == sync tokens
+bit-identically, whatever the pipeline depth.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from dataclasses import dataclass, field
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
@@ -41,12 +53,53 @@ PAD = 0
 
 
 class StepResult(NamedTuple):
-    """Host-side outcome of one engine decode step (all numpy, (B,...))."""
+    """Host-side outcome of one engine decode step (all numpy, (B,...)).
+
+    The trailing fields (``done`` onward) were added with the async
+    pipeline: ``done``/``pos`` are the post-step bookkeeping a pipelined
+    caller needs without touching device state, and the ``*_tokens`` /
+    trace fields carry everything ``fold_step_stats`` records, so stats
+    folding can be deferred off the dispatch critical path.
+    """
+
     chosen: np.ndarray       # (B, L) committed step tokens (PAD-padded)
     done_prev: np.ndarray    # (B,) slot was already done before this step
     eos: np.ndarray          # (B,) step emitted EOS
     failed: np.ndarray       # (B,) B.2 early-stop: all draft rewards low
     accept: np.ndarray       # (B,) draft step accepted (True in sbon_b)
+    done: Optional[np.ndarray] = None    # (B,) done *after* this step
+    pos: Optional[np.ndarray] = None     # (B,) cache position after commit
+    draft_tokens: int = 0    # non-PAD draft candidate tokens this step
+    target_tokens: int = 0   # non-PAD target candidate tokens this step
+    rewards: Optional[np.ndarray] = None      # (B, n) PRM rewards
+    tilted: Optional[np.ndarray] = None       # (B, n) tilted rewards (gsi)
+    logp_ratio: Optional[np.ndarray] = None   # (B, n) log pi_B - log pi_S
+
+
+class StepTicket(NamedTuple):
+    """An in-flight engine step: device arrays, no host synchronisation.
+
+    Returned by ``dispatch_decode`` the moment the step is *enqueued* on
+    the device stream; every field is a jax array (or None for fields the
+    engine mode does not produce).  ``materialize`` turns a ticket into a
+    :class:`StepResult` with one batched ``device_get`` — until then the
+    host is free to run admission, harvest and page bookkeeping for
+    neighbouring steps.  Tickets are immutable snapshots: releasing or
+    re-admitting the slots they cover can never corrupt them.
+    """
+
+    chosen: jax.Array
+    done_prev: jax.Array
+    eos: jax.Array
+    failed: jax.Array
+    accept: jax.Array
+    done: jax.Array
+    pos: jax.Array
+    draft_tokens: jax.Array          # () int32
+    target_tokens: jax.Array         # () int32
+    rewards: Optional[jax.Array]
+    tilted: Optional[jax.Array]
+    logp_ratio: Optional[jax.Array]
 
 
 @dataclass
@@ -58,6 +111,14 @@ class EngineStats:
     folding every array into exact running moments.  Fleet-level views
     (the replica router) combine per-replica instances with
     :func:`merge_engine_stats`.
+
+    Instances are safe to update from concurrent replica threads: the
+    compound read-modify-write paths (``bump`` for counters,
+    ``record_trace`` for the moment fold) serialize on an internal lock,
+    and ``merge_engine_stats`` snapshots each part under that lock.
+    Plain attribute reads stay lock-free (single writes are atomic under
+    the GIL; readers may observe a slightly stale counter, never a torn
+    moment triple).
     """
 
     steps: int = 0
@@ -82,6 +143,9 @@ class EngineStats:
     raw_rewards: list = field(default_factory=list)
     logp_ratio: list = field(default_factory=list)   # log pi_B - log pi_S
     moments: dict = field(default_factory=dict)      # name -> [n, mean, M2]
+    # serializes compound updates from concurrent replica threads
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     @property
     def accept_rate(self) -> float:
@@ -93,27 +157,40 @@ class EngineStats:
         """Fraction of admissions whose prompt matched cached pages."""
         return self.prefix_hits / max(1, self.prefix_queries)
 
+    def bump(self, **deltas: int) -> None:
+        """Atomically add ``deltas`` to the named scalar counters.
+
+        The counter += paths run on engine and scheduler threads; routing
+        them through one locked method keeps fleet totals exact when a
+        stats object is (mis)shared across threads.
+        """
+        with self._lock:
+            for name, d in deltas.items():
+                setattr(self, name, getattr(self, name) + d)
+
     def record_trace(self, name: str, arr) -> None:
         """Append ``arr`` to the named trace (bounded) and fold it into
         the running moments (unbounded-safe Chan/Welford merge)."""
         arr = np.asarray(arr)
-        lst = getattr(self, name)
-        if len(lst) < self.trace_limit:
-            lst.append(arr)
         x = arr.astype(np.float64).ravel()
-        if x.size == 0:
-            return
-        n_a, mean_a, m2_a = self.moments.setdefault(name, [0, 0.0, 0.0])
-        n_b = x.size
-        mean_b = float(x.mean())
-        m2_b = float(((x - mean_b) ** 2).sum())
-        n = n_a + n_b
-        delta = mean_b - mean_a
-        self.moments[name] = [
-            n,
-            mean_a + delta * n_b / n,
-            m2_a + m2_b + delta * delta * n_a * n_b / n,
-        ]
+        with self._lock:
+            lst = getattr(self, name)
+            if len(lst) < self.trace_limit:
+                lst.append(arr)
+            if x.size == 0:
+                return
+            n_a, mean_a, m2_a = self.moments.setdefault(name,
+                                                        [0, 0.0, 0.0])
+            n_b = x.size
+            mean_b = float(x.mean())
+            m2_b = float(((x - mean_b) ** 2).sum())
+            n = n_a + n_b
+            delta = mean_b - mean_a
+            self.moments[name] = [
+                n,
+                mean_a + delta * n_b / n,
+                m2_a + m2_b + delta * delta * n_a * n_b / n,
+            ]
 
     def trace_mean(self, name: str) -> float:
         """Exact mean of every value ever recorded into ``name``."""
@@ -136,24 +213,27 @@ def merge_engine_stats(parts: Sequence[EngineStats]) -> EngineStats:
     Chan/Welford combine ``record_trace`` uses, so fleet-level
     ``trace_mean``/``trace_var`` equal what one scheduler would have
     measured); bounded trace lists concatenate up to ``trace_limit``.
-    The inputs are left untouched.
+    Each part is snapshotted under its own lock (replica threads may
+    still be recording), and the inputs are left untouched.
     """
     out = EngineStats()
     if not parts:
         return out
     out.trace_limit = parts[0].trace_limit
-    for f in ("steps", "accepted", "decisions", "draft_tokens",
-              "target_tokens", "requests_finished", "prefix_queries",
-              "prefix_hits", "prefix_hit_tokens", "prefix_pages_reused",
-              "prefill_tokens", "pages_evicted"):
-        setattr(out, f, sum(getattr(p, f) for p in parts))
-    for trace in ("tilted_rewards", "raw_rewards", "logp_ratio"):
-        for p in parts:
-            lst = getattr(out, trace)
-            lst.extend(getattr(p, trace)[:max(out.trace_limit
-                                              - len(lst), 0)])
+    counters = ("steps", "accepted", "decisions", "draft_tokens",
+                "target_tokens", "requests_finished", "prefix_queries",
+                "prefix_hits", "prefix_hit_tokens", "prefix_pages_reused",
+                "prefill_tokens", "pages_evicted")
     for p in parts:
-        for name, (n_b, mean_b, m2_b) in p.moments.items():
+        with p._lock:
+            for f in counters:
+                setattr(out, f, getattr(out, f) + getattr(p, f))
+            for trace in ("tilted_rewards", "raw_rewards", "logp_ratio"):
+                lst = getattr(out, trace)
+                lst.extend(getattr(p, trace)[:max(out.trace_limit
+                                                  - len(lst), 0)])
+            part_moments = {k: list(v) for k, v in p.moments.items()}
+        for name, (n_b, mean_b, m2_b) in part_moments.items():
             n_a, mean_a, m2_a = out.moments.setdefault(name,
                                                        [0, 0.0, 0.0])
             n = n_a + n_b
@@ -223,10 +303,20 @@ class GSIServingEngine:
         # bit-identical outputs.
         self.prefix_cache = bool(prefix_cache and paged
                                  and self._prefix_supported())
-        self._jit_draft_phase = jax.jit(self._draft_phase)
-        self._jit_target_phase = jax.jit(self._target_phase)
+        self._jit_step = jax.jit(self._decode_core)
         self._jit_commit = jax.jit(self._commit)
         self._jit_admit = jax.jit(self._admit)
+        # standalone phase jits: not on the decode path (the fused
+        # _decode_core is), kept for phase-level tests and debugging
+        self._jit_draft_phase = jax.jit(self._draft_phase)
+        self._jit_target_phase = jax.jit(self._target_phase)
+        # host-side mirrors of per-slot bookkeeping, updated at admit /
+        # materialize time: dispatch_decode assigns pages from these (a
+        # read of the live device state would block on the in-flight
+        # step and serialize the pipeline)
+        self._known_pos = np.zeros((0,), np.int64)
+        self._known_done = np.zeros((0,), bool)
+        self._inflight_steps = 0      # dispatched but not yet materialized
 
     def _prefix_supported(self) -> bool:
         """Sharing is exact iff every layer of all three models keeps its
@@ -257,6 +347,9 @@ class GSIServingEngine:
             "pos": jnp.zeros((batch,), jnp.int32),
             "done": jnp.ones((batch,), bool),
         }
+        self._known_pos = np.zeros((batch,), np.int64)
+        self._known_done = np.ones((batch,), bool)
+        self._inflight_steps = 0
         if not self.paged:
             state["caches"] = self._fresh_caches(batch)
             return state
@@ -293,6 +386,20 @@ class GSIServingEngine:
                 "page allocator.  A paged engine backs one live state at a "
                 "time; build a separate engine for concurrent states.")
 
+    @staticmethod
+    def _with_gen(new_state, state):
+        """Re-attach the *concrete* generation stamp to a jitted output.
+
+        The jitted phases thread ``gen`` through as a device array, which
+        would turn ``_check_gen``'s ``int()`` into a blocking sync on the
+        in-flight step.  The stamp never changes within a live state, so
+        the host keeps the original concrete array attached instead.
+        """
+        if "gen" in state:
+            new_state = dict(new_state)
+            new_state["gen"] = state["gen"]
+        return new_state
+
     def init_state(self, prompts: np.ndarray):
         """prompts: (B, Lp) PAD-padded token array.
 
@@ -303,9 +410,11 @@ class GSIServingEngine:
         prompts = np.asarray(prompts)
         state = self.fresh_state(B)
         state["pending"] = jnp.asarray(prompts[:, 0], jnp.int32)
-        state["done"] = jnp.asarray((prompts == PAD).all(axis=1))
+        done = (prompts == PAD).all(axis=1)
+        state["done"] = jnp.asarray(done)
+        lengths = (prompts != PAD).sum(axis=1)
+        self._known_done = done.copy()
         if self.paged:
-            lengths = (prompts != PAD).sum(axis=1)
             for b in range(B):
                 if lengths[b]:
                     self.pager.claim(b, self.blocks_needed(
@@ -313,8 +422,10 @@ class GSIServingEngine:
             state = self._assign_pages(state,
                                        np.maximum(lengths - 1, 0))
         if prompts.shape[1] > 1:
-            state = self._jit_commit(state, jnp.asarray(prompts[:, 1:],
-                                                        jnp.int32))
+            state = self._with_gen(
+                self._jit_commit(state, jnp.asarray(prompts[:, 1:],
+                                                    jnp.int32)), state)
+        self._known_pos = np.maximum(lengths - 1, 0).astype(np.int64)
         return state
 
     # ------------------------------------------------------------------
@@ -479,10 +590,21 @@ class GSIServingEngine:
 
     def _assign_pages(self, state, ahead):
         """Lazily assign pages so every live slot's table covers the blocks
-        the next jitted phase may write (up to ``pos + ahead``)."""
+        the next jitted phase may write (up to ``pos + ahead``).
+
+        Positions come from the engine's *host-side* mirrors
+        (``_known_pos``/``_known_done``, refreshed at admit and
+        materialize time) rather than the device state, so a pipelined
+        dispatch never blocks on the step still executing.  When steps
+        are dispatched ahead of the last materialize, the caller widens
+        ``ahead`` by one ``max_step_tokens`` per in-flight step; the
+        per-slot want is capped at the slot's reservation, which the
+        force-done budget guarantee makes an upper bound on what it can
+        actually write.
+        """
         state = self._flush_released(state)
-        pos = np.asarray(state["pos"])
-        done = np.asarray(state["done"])
+        pos = self._known_pos
+        done = self._known_done
         ahead = np.broadcast_to(np.asarray(ahead), pos.shape)
         wants = {}
         for slot in list(self.pager.assigned):
@@ -490,9 +612,22 @@ class GSIServingEngine:
                 continue          # pos is frozen; blocks already cover it
             wants[slot] = min(
                 self.nblk,
+                self.pager.max_blocks(slot),
                 pages_for(int(pos[slot]) + int(ahead[slot]) + 1,
                           self.page_size))
         return self._ensure_blocks(state, wants)
+
+    def force_done(self, state, mask) -> dict:
+        """Mark ``mask`` slots done on the device *and* in the host
+        mirror (scheduler budget exhaustion — the one finish condition
+        the device cannot see).  No-op when the mask is empty."""
+        mask = np.asarray(mask, bool)
+        if not mask.any():
+            return state
+        state = dict(state)
+        state["done"] = state["done"] | jnp.asarray(mask)
+        self._known_done = self._known_done | mask
+        return state
 
     # ------------------------------------------------------------------
     # Jitted phases
@@ -670,6 +805,128 @@ class GSIServingEngine:
     # ------------------------------------------------------------------
     # Host loop
     # ------------------------------------------------------------------
+    def _decode_core(self, state, rng, rng_target):
+        """One whole engine step as a single traced computation.
+
+        Draft phase, the rejection-fallback target phase under a
+        device-side ``lax.cond`` (it runs iff any live slot rejected —
+        exactly when the host-checked path used to run it, and
+        ``jnp.where`` selection makes the all-accept case bit-identical
+        to skipping it), commit, and the EOS / B.2 done fold.  Returns
+        ``(new_state, StepTicket)`` — everything a pipelined caller needs
+        without a host round-trip.
+        """
+        g = self.gcfg
+        if self.mode == "sbon_b":
+            tp = self._target_phase(state, rng)
+            chosen = tp["chosen"]
+            accept = jnp.ones_like(state["done"])
+            max_r = jnp.max(tp["rewards"], axis=-1)
+            draft_count = jnp.zeros((), jnp.int32)
+            target_count = jnp.sum(tp["cands"] != PAD).astype(jnp.int32)
+            rewards = tilted = ratio = None
+        else:
+            dp = self._draft_phase(state, rng)
+            accept = dp["accept"]
+            max_r = dp["max_reward"]
+            draft_count = jnp.sum(dp["cands"] != PAD).astype(jnp.int32)
+            rewards = dp["rewards"]
+            tilted = dp["tilted"] if "logp_B" in dp else None
+            ratio = (dp["logp_B"] - dp["logp_S"]) if "logp_B" in dp \
+                else None
+
+            def fallback(_):
+                tp = self._target_phase(state, rng_target)
+                return (tp["chosen"],
+                        jnp.sum(tp["cands"] != PAD).astype(jnp.int32))
+
+            def no_fallback(_):
+                return (jnp.zeros_like(dp["chosen"]),
+                        jnp.zeros((), jnp.int32))
+
+            tp_chosen, target_count = jax.lax.cond(
+                jnp.all(accept), no_fallback, fallback, None)
+            chosen = jnp.where(accept[:, None], dp["chosen"], tp_chosen)
+        done_prev = state["done"]
+        # early stop (paper B.2): all draft rewards below min threshold
+        failed = max_r < g.min_step_reward
+        new_state = self._commit(state, chosen)
+        eos = jnp.any(chosen == g.eos_token_id, axis=1)
+        new_done = done_prev | eos | (failed & ~done_prev)
+        new_state["done"] = new_done
+        ticket = StepTicket(
+            chosen=chosen, done_prev=done_prev, eos=eos, failed=failed,
+            accept=accept, done=new_done, pos=new_state["pos"],
+            draft_tokens=draft_count, target_tokens=target_count,
+            rewards=rewards, tilted=tilted, logp_ratio=ratio)
+        return new_state, ticket
+
+    def dispatch_decode(self, state, rng, rng_target=None):
+        """Enqueue one engine step; returns ``(state, StepTicket)``.
+
+        Non-blocking: page assignment reads the host-side position
+        mirrors, the jitted step is dispatched asynchronously, and no
+        device value is fetched — the host is free to overlap admission
+        and harvest work with the step's device execution.  Pair with
+        :meth:`materialize`; ``step_decode`` is the synchronous
+        composition of the two.
+        """
+        g = self.gcfg
+        if rng_target is None:
+            rng, rng_target = jax.random.split(rng)
+        if self.paged:
+            self._check_gen(state)
+            # page in the blocks every in-flight step may write: one
+            # max_step_tokens of look-ahead per dispatched-unharvested step
+            ahead = (self._inflight_steps + 1) * g.max_step_tokens
+            state = self._assign_pages(state, ahead)
+        new_state, ticket = self._jit_step(state, rng, rng_target)
+        new_state = self._with_gen(new_state, state)
+        self._inflight_steps += 1
+        return new_state, ticket
+
+    def materialize(self, ticket: StepTicket) -> StepResult:
+        """Transfer a dispatched step's whole outcome to the host.
+
+        One batched ``device_get`` over every ticket array (blocking only
+        until the step's device execution completes), refreshing the
+        host-side ``pos``/``done`` mirrors the next dispatch assigns
+        pages from.  Stats folding is split out (:meth:`fold_step_stats`)
+        so a pipelined scheduler can defer it off the dispatch path.
+        """
+        host = jax.device_get(
+            {n: v for n, v in zip(StepTicket._fields, ticket)
+             if v is not None})
+        kw = {n: host.get(n) for n in StepTicket._fields}
+        kw["draft_tokens"] = int(kw["draft_tokens"])
+        kw["target_tokens"] = int(kw["target_tokens"])
+        self._known_pos = np.array(kw["pos"], np.int64)
+        self._known_done = np.array(kw["done"], bool)
+        self._inflight_steps = max(0, self._inflight_steps - 1)
+        return StepResult(**kw)
+
+    def fold_step_stats(self, res: StepResult, stats: EngineStats,
+                        collect_stats: bool = False) -> None:
+        """Fold one materialized step into ``stats``.
+
+        Exactly the accounting the synchronous ``step_decode`` always
+        did, factored out so the pipelined scheduler can run it while the
+        next step executes on device.
+        """
+        if self.mode == "sbon_b":
+            stats.bump(steps=1, target_tokens=res.target_tokens)
+            return
+        live = ~res.done_prev
+        stats.bump(steps=1, draft_tokens=res.draft_tokens,
+                   target_tokens=res.target_tokens,
+                   decisions=int(live.sum()),
+                   accepted=int((res.accept & live).sum()))
+        if collect_stats:
+            stats.record_trace("raw_rewards", res.rewards)
+            if res.logp_ratio is not None:
+                stats.record_trace("logp_ratio", res.logp_ratio)
+                stats.record_trace("tilted_rewards", res.tilted)
+
     def step_decode(self, state, rng, rng_target=None, *,
                     stats: Optional[EngineStats] = None,
                     collect_stats: bool = False):
@@ -679,65 +936,15 @@ class GSIServingEngine:
         and stay inert), commits the chosen step to the three caches, and
         folds EOS / B.2 early-stop into ``state["done"]``.  Returns
         ``(state, StepResult)``; the caller (``run`` or the
-        continuous-batching scheduler) owns response assembly.
+        continuous-batching scheduler) owns response assembly.  This is
+        ``dispatch_decode`` + ``materialize`` back-to-back — the
+        synchronous and pipelined schedulers run the same compiled step.
         """
-        g = self.gcfg
-        B = int(state["done"].shape[0])
-        if rng_target is None:
-            rng, rng_target = jax.random.split(rng)
-        if self.paged:
-            self._check_gen(state)
-            # lazily page in the blocks this step's commit may write
-            state = self._assign_pages(state, g.max_step_tokens)
-        if self.mode == "sbon_b":
-            tp = self._jit_target_phase(state, rng)
-            chosen = tp["chosen"]
-            accept = np.ones((B,), bool)
-            max_r = np.asarray(jnp.max(tp["rewards"], -1))
-            if stats is not None:
-                stats.target_tokens += int(
-                    np.sum(np.asarray(tp["cands"]) != PAD))
-        else:
-            dp = self._jit_draft_phase(state, rng)
-            accept = np.asarray(dp["accept"])
-            chosen = dp["chosen"]
-            max_r = np.asarray(dp["max_reward"])
-            if stats is not None:
-                stats.draft_tokens += int(
-                    np.sum(np.asarray(dp["cands"]) != PAD))
-                if collect_stats:
-                    stats.record_trace("raw_rewards",
-                                       np.asarray(dp["rewards"]))
-                    if "logp_B" in dp:
-                        stats.record_trace(
-                            "logp_ratio",
-                            np.asarray(dp["logp_B"] - dp["logp_S"]))
-                        stats.record_trace("tilted_rewards",
-                                           np.asarray(dp["tilted"]))
-            if not accept.all():
-                tp = self._jit_target_phase(state, rng_target)
-                chosen = jnp.where(jnp.asarray(accept)[:, None],
-                                   chosen, tp["chosen"])
-                if stats is not None:
-                    stats.target_tokens += int(
-                        np.sum(np.asarray(tp["cands"]) != PAD))
-            if stats is not None:
-                live = ~np.asarray(state["done"])
-                stats.decisions += int(live.sum())
-                stats.accepted += int((accept & live).sum())
-
-        # early stop (paper B.2): all draft rewards below min threshold
-        failed = max_r < g.min_step_reward
-        chosen_np = np.asarray(chosen)
-        done_prev = np.asarray(state["done"])
-        state = self._jit_commit(state, chosen)
-        eos = np.asarray(jnp.any(chosen == g.eos_token_id, axis=1))
-        new_done = done_prev | eos | (failed & ~done_prev)
-        state["done"] = jnp.asarray(new_done)
+        state, ticket = self.dispatch_decode(state, rng, rng_target)
+        res = self.materialize(ticket)
         if stats is not None:
-            stats.steps += 1
-        return state, StepResult(chosen=chosen_np, done_prev=done_prev,
-                                 eos=eos, failed=failed, accept=accept)
+            self.fold_step_stats(res, stats, collect_stats)
+        return state, res
 
     def admit(self, state, admit_mask: np.ndarray, prompts: np.ndarray,
               starts=None):
@@ -792,10 +999,18 @@ class GSIServingEngine:
         elif starts_np.any():
             raise ValueError("prefix-cache starts require a paged engine")
         tails = pack_tails(prompts, starts_np)
-        out = self._jit_admit(state, jnp.asarray(admit_mask),
-                              jnp.asarray(tails), jnp.asarray(starts_np))
+        out = self._with_gen(
+            self._jit_admit(state, jnp.asarray(admit_mask),
+                            jnp.asarray(tails), jnp.asarray(starts_np)),
+            state)
         for tokens, slot, full in publish:
             self.pager.publish(tokens, self.pager.assigned[slot][:full])
+        # refresh the host mirrors: an admitted slot ends the prefill at
+        # pos == len(prompt) - 1 with pending == prompt[-1], live
+        lengths = (prompts != PAD).sum(axis=1)
+        admitted = np.nonzero(admit_mask)[0]
+        self._known_pos[admitted] = np.maximum(lengths[admitted] - 1, 0)
+        self._known_done[admitted] = False
         return out
 
     def run(self, prompts: np.ndarray, rng, *,
@@ -812,6 +1027,7 @@ class GSIServingEngine:
         stats = EngineStats()
         responses = [[] for _ in range(B)]
 
+        res = None
         for it in range(g.max_steps):
             rng, k1, k2 = jax.random.split(rng, 3)
             state, res = self.step_decode(state, k1, k2, stats=stats,
@@ -820,7 +1036,7 @@ class GSIServingEngine:
                 if not res.done_prev[b]:
                     toks = res.chosen[b][res.chosen[b] != PAD]
                     responses[b].append(toks)
-            if np.asarray(state["done"]).all():
+            if res.done.all():
                 break
-        stats.requests_finished = int(np.asarray(state["done"]).sum())
+        stats.requests_finished = 0 if res is None else int(res.done.sum())
         return responses, stats

@@ -120,6 +120,16 @@ class PagePool:
         """Table blocks the slot's claim has materialized so far."""
         return len(self.assigned.get(slot, ()))
 
+    def max_blocks(self, slot: int) -> int:
+        """Ceiling on the slot's table blocks: assigned + remaining claim.
+
+        Pipelined page assignment looks ahead one decode step per
+        in-flight ticket; clamping the look-ahead here keeps a
+        conservative estimate from ever out-running the admission
+        reservation (the slot is force-done before it could write there).
+        """
+        return len(self.assigned.get(slot, ())) + self.claimed.get(slot, 0)
+
     # -- refcount plumbing ---------------------------------------------
     def _ref(self, page: int) -> None:
         rc = self.refcount.get(page, 0)

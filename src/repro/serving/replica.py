@@ -13,11 +13,22 @@ Because the radix index is engine-held host state, *which* replica a
 request lands on decides whether its prompt's preamble pages are already
 cached there: the router's preamble-affinity policy exists to keep
 requests with a common prefix on the replica that holds its pages.
+
+For the thread-per-replica fleet loop each replica carries a thread-safe
+*inbox*: ``submit`` only enqueues (any thread, no scheduler state
+touched) and the thread driving the replica drains the inbox into the
+scheduler before each admission round.  A replica also owns its rng
+chain, seeded by ``fold_in(fleet_key, index)`` so its key sequence never
+depends on how many peers it has or on thread interleaving.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
 
 from repro.serving.gsi_engine import GSIServingEngine
 from repro.serving.scheduler import GSIScheduler, Response
@@ -30,11 +41,19 @@ class Replica:
     ``index`` is the replica's stable position in the router's fleet (it
     is what the affinity hash maps to); ``scheduler`` owns the engine.
     ``routed`` counts lifetime requests assigned here (routing stats).
+    ``inbox``/``cv`` are the thread-safe submit queue and wake signal of
+    the fleet loop; only the thread driving the replica ever touches the
+    scheduler itself.
     """
 
     index: int
     scheduler: GSIScheduler
     routed: int = 0
+    inbox: deque = field(default_factory=deque, repr=False)
+    cv: threading.Condition = field(default_factory=threading.Condition,
+                                    repr=False, compare=False)
+    _rng: Optional[jax.Array] = field(default=None, repr=False,
+                                      compare=False)
 
     @property
     def engine(self) -> GSIServingEngine:
@@ -43,46 +62,93 @@ class Replica:
 
     @property
     def load(self) -> int:
-        """Outstanding work: queued requests + live (decoding) slots.
+        """Outstanding work: inbox + queued requests + live slots.
 
         This is the quantity the router's least-loaded policy and the
         affinity policy's skew guard compare across replicas.
         """
-        return len(self.scheduler.queue) + self.scheduler.pool.num_live
+        return len(self.inbox) + len(self.scheduler.queue) \
+            + self.scheduler.pool.num_live
 
     @property
     def has_work(self) -> bool:
-        """True while anything is queued or decoding on this replica."""
-        return bool(self.scheduler.queue) or \
-            self.scheduler.pool.num_live > 0
+        """True while anything is inboxed, queued, decoding or still in
+        the scheduler's async pipeline on this replica."""
+        return bool(self.inbox) or bool(self.scheduler.queue) \
+            or self.scheduler.pool.num_live > 0 \
+            or self.scheduler.has_pending
 
     def next_arrival(self) -> Optional[float]:
-        """Arrival time of the head queued request (None when empty)."""
-        if not self.scheduler.queue:
-            return None
-        return float(self.scheduler.queue[0].arrival_time)
+        """Earliest arrival time across inbox and queue (None if empty).
 
+        The inbox is snapshotted under the replica lock — a concurrent
+        ``submit`` appending mid-iteration would otherwise kill the
+        fleet-loop thread with "deque mutated during iteration".
+        """
+        with self.cv:
+            times = [a for (_, _, _, a) in self.inbox]
+        if self.scheduler.queue:
+            times.append(float(self.scheduler.queue[0].arrival_time))
+        return min(times) if times else None
+
+    # -- submission (any thread) ---------------------------------------
     def submit(self, prompt, *, request_id: str,
                max_steps: Optional[int] = None,
                arrival_time: float = 0.0) -> str:
-        """Queue a routed request on this replica's scheduler."""
-        self.routed += 1
-        return self.scheduler.submit(prompt, request_id=request_id,
-                                     max_steps=max_steps,
-                                     arrival_time=arrival_time)
+        """Enqueue a routed request on this replica's inbox (thread-safe)
+        and wake the replica's fleet-loop thread if it is idle."""
+        with self.cv:
+            self.routed += 1
+            self.inbox.append((prompt, request_id, max_steps,
+                               float(arrival_time)))
+            self.cv.notify_all()
+        return request_id
+
+    # -- driving (owner thread only) -----------------------------------
+    def drain_inbox(self) -> int:
+        """Move inboxed requests into the scheduler queue; returns the
+        number drained.  Called only by the thread driving the replica."""
+        moved = 0
+        while True:
+            with self.cv:
+                if not self.inbox:
+                    return moved
+                prompt, rid, max_steps, arrival = self.inbox.popleft()
+            self.scheduler.submit(prompt, request_id=rid,
+                                  max_steps=max_steps,
+                                  arrival_time=arrival)
+            moved += 1
+
+    def seed_rng(self, fleet_key) -> None:
+        """Derive this replica's independent rng chain from the fleet
+        key: ``fold_in(key, index)`` — stable whatever the fleet size or
+        thread schedule."""
+        self._rng = jax.random.fold_in(fleet_key, self.index)
+
+    def next_keys(self) -> Tuple[jax.Array, jax.Array]:
+        """Advance the replica rng chain by one engine step (k1, k2)."""
+        if self._rng is None:
+            raise RuntimeError("seed_rng() must be called before stepping "
+                               "a replica through its own rng chain")
+        self._rng, k1, k2 = jax.random.split(self._rng, 3)
+        return k1, k2
 
     def step(self, rng, rng_target=None) -> List[Response]:
         """One scheduler step (admit / decode / harvest) on this replica.
 
-        A replica with no live slots and nothing ready to admit returns
-        without running an engine step, so idle replicas cost nothing.
+        Drains the inbox first, so sequential (non-threaded) fleets see
+        every routed request.  A replica with no live slots and nothing
+        ready to admit returns without running an engine step, so idle
+        replicas cost nothing.
         """
+        self.drain_inbox()
         return self.scheduler.step(rng, rng_target)
 
 
 def build_replicas(engines, *, capacity: int, continuous: bool = True,
                    prompt_pad_len: int = 0, collect_stats: bool = False,
-                   cache_aware: bool = True) -> List[Replica]:
+                   cache_aware: bool = True,
+                   sync: bool = True) -> List[Replica]:
     """Wrap N independent engines into router-ready replicas.
 
     Each engine must be a distinct object: a paged engine backs one live
@@ -90,7 +156,8 @@ def build_replicas(engines, *, capacity: int, continuous: bool = True,
     never share one.  ``capacity`` is per replica — the fleet decodes
     ``len(engines) * capacity`` slots in total.  ``cache_aware`` turns on
     cache-aware admission ordering inside each replica (queued requests
-    with live radix matches admit first).
+    with live radix matches admit first); ``sync=False`` gives every
+    replica the pipelined scheduler (one step ticket in flight).
     """
     engines = list(engines)
     if len(set(map(id, engines))) != len(engines):
@@ -103,6 +170,7 @@ def build_replicas(engines, *, capacity: int, continuous: bool = True,
                                 continuous=continuous,
                                 prompt_pad_len=prompt_pad_len,
                                 collect_stats=collect_stats,
-                                cache_aware=cache_aware))
+                                cache_aware=cache_aware,
+                                sync=sync))
         for i, eng in enumerate(engines)
     ]

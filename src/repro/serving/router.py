@@ -27,6 +27,22 @@ queue it joins.  Three policies:
     Always the replica with the fewest outstanding requests
     (queued + live slots); ties break to the lowest replica index.
 
+The hash tier comes in two flavours (``hash_tier``): ``mod`` — blake2b
+of the chunk mod N — and ``rendezvous`` — highest-random-weight hashing,
+where growing the fleet from N to N+1 replicas remaps only ~1/(N+1) of
+preamble groups (every moved group moves *to* the new replica), so a
+scale-out does not cold-start every replica's prefix cache.
+
+The fleet is driven either sequentially (``threaded=False`` — ``step``
+loops over replicas in host code) or, by default, by a thread per
+replica: each thread owns its replica's scheduler/engine/state outright
+(replicas share no device state, so threads never contend on anything
+but the router's response ledger), drains a thread-safe submit inbox,
+waits out idle gaps on a condition variable instead of a sleep poll, and
+pushes finished :class:`Response` objects to the router under a lock.
+Per-replica rng chains are seeded by ``fold_in(fleet_key, index)``, so a
+replica's key sequence is independent of peers and thread interleaving.
+
 The router assembles id-keyed :class:`Response` objects across replicas
 (out-of-order completion included) and aggregates ``prefix_stats()`` /
 ``EngineStats`` over the fleet.  Replicas share nothing, so per-replica
@@ -37,7 +53,7 @@ that.
 from __future__ import annotations
 
 import hashlib
-import time
+import threading
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -48,18 +64,42 @@ from repro.serving.replica import Replica, build_replicas
 from repro.serving.scheduler import Response
 
 POLICIES = ("affinity", "round_robin", "least_loaded")
+HASH_TIERS = ("mod", "rendezvous")
+
+
+def _chunk_bytes(tokens) -> bytes:
+    return np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
 
 
 def preamble_hash(tokens, num_replicas: int) -> int:
-    """Deterministic replica index for a token chunk.
+    """Deterministic replica index for a token chunk (blake2b mod N).
 
     Stable across processes (unlike builtin ``hash``, which is salted),
     so affinity placement is reproducible run to run — the property
     tests and the throughput ``--check`` both rely on that.
     """
-    data = np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
-    digest = hashlib.blake2b(data, digest_size=8).digest()
+    digest = hashlib.blake2b(_chunk_bytes(tokens), digest_size=8).digest()
     return int.from_bytes(digest, "big") % num_replicas
+
+
+def preamble_rendezvous(tokens, num_replicas: int) -> int:
+    """Rendezvous (highest-random-weight) replica index for a chunk.
+
+    Each replica's weight is a blake2b over (chunk, replica index); the
+    chunk goes to the max-weight replica.  Because the N existing weights
+    are unchanged when replica N+1 is added, a chunk moves on scale-out
+    iff the *new* replica wins — so only ~1/(N+1) of preamble groups
+    remap, and every moved group moves to the new replica (bounded
+    movement; ``mod`` reshuffles ~N/(N+1) of them).
+    """
+    data = _chunk_bytes(tokens)
+    best, best_w = 0, b""
+    for i in range(num_replicas):
+        w = hashlib.blake2b(data + i.to_bytes(4, "big"),
+                            digest_size=8).digest()
+        if w > best_w:
+            best, best_w = i, w
+    return best
 
 
 class ReplicaRouter:
@@ -75,33 +115,53 @@ class ReplicaRouter:
                exceeds the least-loaded replica's by more than ``skew``
                requests, route least-loaded instead (None disables the
                guard — pure affinity, used by deterministic checks).
+    hash_tier: ``mod`` (blake2b mod N) or ``rendezvous`` (HRW; adding a
+               replica remaps only ~1/N of preamble groups).
     cache_aware: enable cache-aware admission ordering inside each
                replica (queued requests with live radix matches first).
+    sync:      forwarded to each replica scheduler — False gives every
+               replica the pipelined (one-ticket-in-flight) decode loop.
+    threaded:  drive ``run`` with one thread per replica (the fleet
+               loop); False falls back to the sequential host loop.
+               ``step`` is always the sequential single-step API.
     continuous / prompt_pad_len / collect_stats: forwarded to each
                replica's :class:`GSIScheduler`.
     """
 
     def __init__(self, engines, *, capacity: int,
                  policy: str = "affinity", skew: Optional[int] = 4,
+                 hash_tier: str = "mod",
                  continuous: bool = True, prompt_pad_len: int = 0,
-                 collect_stats: bool = False, cache_aware: bool = True):
+                 collect_stats: bool = False, cache_aware: bool = True,
+                 sync: bool = True, threaded: bool = True):
         """Build one replica (engine + scheduler) per engine given."""
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
                              f"choose from {POLICIES}")
+        if hash_tier not in HASH_TIERS:
+            raise ValueError(f"unknown hash tier {hash_tier!r}; "
+                             f"choose from {HASH_TIERS}")
         self.replicas: List[Replica] = build_replicas(
             engines, capacity=capacity, continuous=continuous,
             prompt_pad_len=prompt_pad_len, collect_stats=collect_stats,
-            cache_aware=cache_aware)
+            cache_aware=cache_aware, sync=sync)
         self.policy = policy
         self.skew = skew
+        self.hash_tier = hash_tier
         self.capacity = capacity
+        self.threaded = threaded
         self.responses: Dict[str, Response] = {}
         self.routing = {"affinity_matched": 0, "affinity_hashed": 0,
                         "fallback_load": 0}
         self._replica_of: Dict[str, int] = {}
         self._rr = 0
         self._seq = 0
+        # fleet-loop plumbing: responses ledger lock + drain signal;
+        # a replica thread that dies parks its exception here so run()
+        # can abort and re-raise instead of waiting forever
+        self._lock = threading.Lock()
+        self._fleet_cv = threading.Condition()
+        self._fleet_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------
     # Placement
@@ -112,7 +172,7 @@ class ReplicaRouter:
         return len(self.replicas)
 
     def loads(self) -> List[int]:
-        """Outstanding requests (queued + live) per replica."""
+        """Outstanding requests (inbox + queued + live) per replica."""
         return [r.load for r in self.replicas]
 
     def _least_loaded(self, loads: Sequence[int]) -> int:
@@ -135,6 +195,12 @@ class ReplicaRouter:
                                                np.int32).reshape(-1),
                                     loads)
 
+    def _hash_replica(self, chunk) -> int:
+        """Tier-2 placement: hash the page-aligned preamble chunk."""
+        if self.hash_tier == "rendezvous":
+            return preamble_rendezvous(chunk, self.num_replicas)
+        return preamble_hash(chunk, self.num_replicas)
+
     def _route_affinity(self, prompt: np.ndarray,
                         loads: Sequence[int]) -> int:
         """Longest-preamble affinity with hash seeding and a skew guard.
@@ -142,9 +208,9 @@ class ReplicaRouter:
         Tier 1: the replica whose radix index holds the longest cached
         prefix of ``prompt`` (ties break to the less-loaded replica).
         Tier 2 (no replica has a match): hash the first full page-size
-        chunk of the prompt.  Tier 3 (prompt too short to ever share a
-        page): least-loaded.  Finally the skew guard may override a
-        placement that would unbalance the fleet.
+        chunk of the prompt (``hash_tier``).  Tier 3 (prompt too short
+        to ever share a page): least-loaded.  Finally the skew guard may
+        override a placement that would unbalance the fleet.
         """
         best, best_len = None, 0
         for rep in self.replicas:
@@ -158,8 +224,7 @@ class ReplicaRouter:
         else:
             page_size = self.replicas[0].engine.page_size
             if prompt.size - 1 >= page_size:
-                best = preamble_hash(prompt[:page_size],
-                                     self.num_replicas)
+                best = self._hash_replica(prompt[:page_size])
                 tier = "affinity_hashed"
             else:
                 self.routing["fallback_load"] += 1
@@ -182,7 +247,9 @@ class ReplicaRouter:
         """Route a prompt to a replica queue; returns the request id.
 
         Ids are unique fleet-wide (router-assigned ``req-N`` by default;
-        caller-provided ids are checked against every replica).
+        caller-provided ids are checked against every replica).  The
+        hand-off goes through the replica's thread-safe inbox, so
+        submitting while a threaded ``run`` is draining is safe.
         """
         if request_id is None:
             # skip ids a caller already used explicitly — a collision
@@ -199,6 +266,8 @@ class ReplicaRouter:
                                   max_steps=max_steps,
                                   arrival_time=arrival_time)
         self._replica_of[request_id] = idx
+        with self._fleet_cv:
+            self._fleet_cv.notify_all()   # wake a sequential idle wait
         return request_id
 
     def replica_of(self, request_id: str) -> int:
@@ -208,8 +277,9 @@ class ReplicaRouter:
     def step(self, rng) -> List[Response]:
         """Step every replica once; returns the responses finished now.
 
-        Each replica gets an independent key pair split from ``rng``, so
-        a replica's rng stream never depends on how many peers it has or
+        Sequential single-step API (testing / manual driving): each
+        replica gets an independent key pair split from ``rng``, so a
+        replica's rng stream never depends on how many peers it has or
         on what they decode.  Idle replicas skip their engine step.
         """
         keys = jax.random.split(rng, 2 * self.num_replicas)
@@ -221,22 +291,128 @@ class ReplicaRouter:
                 finished.append(resp)
         return finished
 
+    # ------------------------------------------------------------------
+    # Fleet loop
+    # ------------------------------------------------------------------
     def run(self, rng) -> Dict[str, Response]:
         """Drain every replica; returns id -> Response across the fleet.
 
+        ``threaded=True`` (default): one thread per replica drives that
+        replica's scheduler until the whole fleet is drained — replicas
+        decode concurrently, each on its own engine/state/pool, and the
+        main thread waits on a condition variable (no sleep-polling).
+        ``threaded=False``: the sequential host loop steps replicas one
+        after another (the pre-fleet-loop behaviour, key schedule
+        included).
+        """
+        if not self.threaded:
+            return self._run_sequential(rng)
+        for rep in self.replicas:
+            rep.seed_rng(rng)
+        self._fleet_error = None
+        stop = threading.Event()
+        threads = [threading.Thread(target=self._serve, args=(rep, stop),
+                                    name=f"replica-{rep.index}",
+                                    daemon=True)
+                   for rep in self.replicas]
+        for t in threads:
+            t.start()
+        try:
+            with self._fleet_cv:
+                while self._fleet_error is None and \
+                        any(rep.has_work for rep in self.replicas):
+                    # woken by replica threads on progress/idle/error;
+                    # the timeout is a missed-notification safety net
+                    self._fleet_cv.wait(timeout=0.2)
+        finally:
+            stop.set()
+            for rep in self.replicas:
+                with rep.cv:
+                    rep.cv.notify_all()
+            for t in threads:
+                t.join()
+        if self._fleet_error is not None:
+            raise RuntimeError(
+                "a replica fleet-loop thread failed; the run was "
+                "aborted") from self._fleet_error
+        return dict(self.responses)
+
+    def _serve(self, rep: Replica, stop: threading.Event) -> None:
+        """Fleet-loop body: drive one replica until the run is stopped.
+
+        Only this thread touches the replica's scheduler/engine/state.
+        Idle replicas park on their condition variable (woken by submit
+        or stop); arrival gaps wait exactly the gap.  Finished responses
+        are pushed to the router ledger under its lock.  Any exception
+        is parked on the router (``run`` re-raises it) instead of
+        silently killing the thread and hanging the fleet.
+        """
+        try:
+            self._serve_loop(rep, stop)
+        except BaseException as exc:                  # noqa: BLE001
+            with self._fleet_cv:
+                if self._fleet_error is None:
+                    self._fleet_error = exc
+                self._fleet_cv.notify_all()
+
+    def _serve_loop(self, rep: Replica, stop: threading.Event) -> None:
+        """The actual per-replica drive loop (see ``_serve``)."""
+        sched = rep.scheduler
+        while True:
+            if stop.is_set() and self._fleet_error is not None:
+                return            # a peer died: abort, don't drain
+            rep.drain_inbox()
+            now = sched._now()
+            busy = sched.pool.num_live > 0 or sched.has_pending
+            ready = bool(sched.queue) and \
+                sched.queue[0].arrival_time <= now
+            if not busy and not ready:
+                nxt = rep.next_arrival()
+                if nxt is None:
+                    # fully drained: tell the fleet waiter, then park
+                    with self._fleet_cv:
+                        self._fleet_cv.notify_all()
+                    with rep.cv:
+                        if stop.is_set():
+                            return
+                        if not rep.inbox:
+                            rep.cv.wait(timeout=0.05)
+                    continue
+                wait = nxt - now
+                if wait > 0:
+                    with rep.cv:
+                        if not rep.inbox and not stop.is_set():
+                            rep.cv.wait(timeout=wait)
+                continue
+            k1, k2 = rep.next_keys()
+            finished = sched.step(k1, k2)
+            if finished:
+                with self._lock:
+                    for resp in finished:
+                        self.responses[resp.request_id] = resp
+                with self._fleet_cv:
+                    self._fleet_cv.notify_all()
+
+    def _run_sequential(self, rng) -> Dict[str, Response]:
+        """Sequential fleet drain (``threaded=False``).
+
         Mirrors ``GSIScheduler.run``: while any replica holds work, step
         the fleet; when every live slot is drained and the earliest
-        queued arrival is still in the future, sleep until it lands.
+        queued arrival is still in the future, wait out exactly the gap
+        on the fleet condition variable (woken early by new submits).
         """
         while any(rep.has_work for rep in self.replicas):
-            if not any(rep.scheduler.pool.num_live
-                       for rep in self.replicas):
+            busy = any(rep.scheduler.pool.num_live
+                       or rep.scheduler.has_pending
+                       for rep in self.replicas)
+            if not busy:
                 waits = [rep.next_arrival() - rep.scheduler._now()
                          for rep in self.replicas
                          if rep.next_arrival() is not None]
                 wait = min(waits) if waits else 0.0
                 if wait > 0:
-                    time.sleep(min(wait, 0.05))
+                    with self._fleet_cv:
+                        self._fleet_cv.wait(timeout=wait)
                     continue
             rng, k = jax.random.split(rng)
             self.step(k)
@@ -249,7 +425,7 @@ class ReplicaRouter:
     def engine_steps(self) -> int:
         """Total decode steps across the fleet (sum over replicas).
 
-        Replicas step concurrently in a real deployment, so the
+        Replicas step concurrently in the threaded fleet loop, so the
         wall-clock proxy is ``max`` — see ``engine_steps_max``.
         """
         return sum(rep.scheduler.engine_steps for rep in self.replicas)
@@ -283,20 +459,42 @@ class ReplicaRouter:
         agg["per_replica"] = per
         return agg
 
+    def pipeline_stats(self) -> Dict[str, object]:
+        """Fleet-aggregate async-pipeline overlap counters.
+
+        Scalar seconds sum across replicas, ``overlap_fraction`` is
+        recomputed from the sums, and ``per_replica`` carries each
+        replica's own ``GSIScheduler.pipeline_stats()``.
+        """
+        per = [rep.scheduler.pipeline_stats() for rep in self.replicas]
+        agg: Dict[str, object] = {
+            k: sum(p[k] for p in per)
+            for k in per[0] if k not in ("sync", "overlap_fraction")}
+        total = agg["overlap_host_s"] + agg["serial_host_s"]
+        agg["overlap_fraction"] = \
+            agg["overlap_host_s"] / total if total > 0 else 0.0
+        agg["sync"] = per[0]["sync"]
+        agg["per_replica"] = per
+        return agg
+
     def fresh_state(self) -> None:
         """Reset every replica for a new serving phase.
 
         Calls each scheduler's ``fresh_state()`` — engine state, page
         pool and radix index are rebuilt and the prefix/stat counters
-        zeroed — and clears the router's own response and routing
-        ledgers.  Request-id uniqueness is also reset (phases are
-        independent).
+        zeroed — clears each replica's inbox and rng chain, and clears
+        the router's own response and routing ledgers.  Request-id
+        uniqueness is also reset (phases are independent).
         """
         for rep in self.replicas:
+            with rep.cv:
+                rep.inbox.clear()
             rep.scheduler.fresh_state()
             rep.routed = 0
+            rep._rng = None
         self.responses = {}
         self._replica_of = {}
         self.routing = {k: 0 for k in self.routing}
         self._rr = 0
         self._seq = 0
+        self._fleet_error = None

@@ -23,19 +23,32 @@ deferred.  ``prefix_stats()`` reports hit/evict/reuse counters.
 ``continuous=False`` degrades to gang scheduling (admit only into an empty
 pool, run the batch to completion) — the fixed-batch ``run()`` discipline,
 timed against the continuous mode in ``benchmarks/throughput.py``.
+
+``sync=False`` turns the lock-step loop into a two-stage pipeline: the
+scheduler keeps one dispatched :class:`~repro.serving.gsi_engine.StepTicket`
+in flight and runs step k+1's host work — the previous step's harvest
+(token slicing, response assembly, stats folding) and admission — while
+step k executes on the device.  Slot release stays *deferred one step*:
+a slot whose request finishes at step k is released only after step k's
+ticket has been materialized to host memory, so a slot is never
+reacquired before its final tokens are harvested, and admission then sees
+exactly the free-slot/free-page view the synchronous scheduler would —
+which is what makes async == sync tokens bit-identical (same engine
+steps, same slots, same rng keys) at any temperature.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.gsi_engine import EngineStats, GSIServingEngine
+from repro.serving.gsi_engine import (EngineStats, GSIServingEngine,
+                                      StepResult, StepTicket)
 from repro.serving.slots import PAD, SlotPool, pack_prompts
 
 
@@ -80,6 +93,36 @@ class Response:
         return self.finished_at - self.arrival_time
 
 
+@dataclass
+class _InflightStep:
+    """A dispatched-but-unmaterialized engine step (async pipeline).
+
+    ``bound`` snapshots slot -> partial :class:`Response` at dispatch
+    time, so the harvest attributes the step's rows to the requests that
+    actually occupied the slots — even after the slots are released and
+    re-admitted to newer requests.
+    """
+
+    ticket: StepTicket
+    bound: Dict[int, Response]
+
+
+@dataclass
+class _RetiredStep:
+    """A materialized step awaiting its deferred (overlapped) harvest.
+
+    ``res`` is host numpy (the ticket was materialized before any of its
+    slots could be released), so the heavy per-slot token slicing and
+    response finalization can safely run while the *next* step executes
+    on device.  ``finished`` carries the finish decisions — (slot,
+    response, reason, finished_at) — made at release time.
+    """
+
+    res: StepResult
+    bound: Dict[int, Response]
+    finished: List[Tuple[int, Response, str, float]]
+
+
 class GSIScheduler:
     """Drives ``GSIServingEngine.step_decode`` over a slot pool.
 
@@ -103,11 +146,20 @@ class GSIScheduler:
                  endless stream of fresher cache hits cannot starve a
                  cold request.  Off by default because it reorders
                  sampling streams (router replicas enable it).
+    sync:        True (default) runs the lock-step loop: every ``step``
+                 dispatches one engine step and blocks for its results.
+                 False runs the two-stage pipeline: one ticket stays in
+                 flight and the previous step's harvest overlaps the
+                 device execution (``step`` then returns the responses
+                 *finalized* this call, which lag the decode by one
+                 step until the pipeline drains).  Token streams are
+                 bit-identical either way.
     """
 
     def __init__(self, engine: GSIServingEngine, *, capacity: int,
                  continuous: bool = True, prompt_pad_len: int = 0,
-                 collect_stats: bool = False, cache_aware: bool = False):
+                 collect_stats: bool = False, cache_aware: bool = False,
+                 sync: bool = True):
         """Build a scheduler over ``engine`` with ``capacity`` slots."""
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -116,6 +168,7 @@ class GSIScheduler:
         self.continuous = continuous
         self.collect_stats = collect_stats
         self.cache_aware = cache_aware
+        self.sync = sync
         self.pool = SlotPool(capacity)
         self.queue: deque = deque()
         self.state = engine.fresh_state(capacity)
@@ -133,6 +186,17 @@ class GSIScheduler:
         # head-of-line starvation; FIFO order bounds everyone behind it)
         self._bypass_limit = 8
         self._head_bypassed = 0
+        # async pipeline state: at most one dispatched-unmaterialized
+        # ticket plus one materialized-unharvested step
+        self._inflight: Optional[_InflightStep] = None
+        self._retired: Optional[_RetiredStep] = None
+        # idle handling: woken by submit(), waits out exact arrival gaps
+        self._wake = threading.Condition()
+        # host/device overlap accounting (pipeline_stats)
+        self._overlap_host_s = 0.0       # host work under an in-flight step
+        self._serial_host_s = 0.0        # host work with the device idle
+        self._materialize_wait_s = 0.0   # blocked waiting on device results
+        self._dispatch_s = 0.0           # enqueueing steps (incl. compiles)
 
     def fresh_state(self) -> None:
         """Reset for a new serving phase (back-to-back benchmark runs).
@@ -155,6 +219,12 @@ class GSIScheduler:
         self._budget[:] = 0
         self._t0 = None
         self._head_bypassed = 0
+        self._inflight = None
+        self._retired = None
+        self._overlap_host_s = 0.0
+        self._serial_host_s = 0.0
+        self._materialize_wait_s = 0.0
+        self._dispatch_s = 0.0
 
     # ------------------------------------------------------------------
     # Submission / admission control
@@ -197,6 +267,8 @@ class GSIScheduler:
             # not-yet-arrived request submitted before it
             self.queue = deque(sorted(self.queue,
                                       key=lambda r: r.arrival_time))
+        with self._wake:
+            self._wake.notify_all()      # run() may be idle-waiting
         return request_id
 
     def _now(self) -> float:
@@ -266,16 +338,23 @@ class GSIScheduler:
                 self._head_bypassed = 0
             del self.queue[pick]
             slot = free.pop(0)
+            if self._inflight is not None and \
+                    slot in self._inflight.bound:
+                # deferred-release invariant: a slot bound by a ticket
+                # still in flight has not had its final tokens
+                # materialized — admission must never reacquire it
+                raise RuntimeError(
+                    f"slot {slot} reacquired while its step is still in "
+                    f"flight (deferred-release invariant violated)")
             self.engine.claim_slot(slot, req.prompt.size, req.max_steps,
                                    shared=shared)
             batch[slot] = req
             starts[slot] = hit_tok
-            self.stats.prefix_queries += 1
-            self.stats.prefix_hits += bool(hit_tok)
-            self.stats.prefix_hit_tokens += hit_tok
-            self.stats.prefix_pages_reused += len(shared)
-            self.stats.prefill_tokens += max(req.prompt.size - 1 - hit_tok,
-                                             0)
+            self.stats.bump(
+                prefix_queries=1, prefix_hits=int(bool(hit_tok)),
+                prefix_hit_tokens=int(hit_tok),
+                prefix_pages_reused=len(shared),
+                prefill_tokens=max(req.prompt.size - 1 - hit_tok, 0))
         if not batch:
             return []
         longest = max(r.prompt.size for r in batch.values())
@@ -325,7 +404,27 @@ class GSIScheduler:
     # ------------------------------------------------------------------
     def step(self, rng, rng_target=None) -> List[Response]:
         """Admit ready requests, run one engine decode step, harvest and
-        free finished slots.  Returns the responses finished this step."""
+        free finished slots.
+
+        ``sync=True``: dispatches and materializes one step, returning
+        the responses finished *this* step.  ``sync=False``: pumps the
+        pipeline (harvest + admission for the in-flight step) and
+        dispatches the next step without waiting for it — returned
+        responses are the ones finalized this call, which lag the decode
+        by one step until the pipeline drains (``flush``).
+        """
+        if self.sync:
+            return self._step_sync(rng, rng_target)
+        now = self._now()
+        finished = self._pump(now)
+        if self.pool.num_live:
+            self._dispatch(rng, rng_target)
+        else:
+            finished += self.flush()
+        return finished
+
+    def _step_sync(self, rng, rng_target=None) -> List[Response]:
+        """The lock-step path: one dispatched + materialized step."""
         now = self._now()
         self._admit_ready(now)
         if self.pool.num_live == 0:
@@ -357,22 +456,207 @@ class GSIScheduler:
                 self.engine.release_slot(slot)
                 del self._partial[slot]
                 self.responses[resp.request_id] = resp
-                self.stats.requests_finished += 1
+                self.stats.bump(requests_finished=1)
                 finished.append(resp)
-        if force_done.any():
-            self.state["done"] = self.state["done"] | jnp.asarray(force_done)
+        self.state = self.engine.force_done(self.state, force_done)
         return finished
+
+    # ------------------------------------------------------------------
+    # Async pipeline (sync=False)
+    # ------------------------------------------------------------------
+    @property
+    def has_pending(self) -> bool:
+        """True while the pipeline holds an unharvested step."""
+        return self._inflight is not None or self._retired is not None
+
+    def _pump(self, now: float) -> List[Response]:
+        """Advance the pipeline up to (not including) the next dispatch.
+
+        Order matters for both overlap and identity:
+
+        1. heavy-harvest the step materialized last call — token
+           slicing, response finalization, stats folding — *while the
+           in-flight step executes on device* (this is the overlapped
+           host work the pipeline exists for);
+        2. materialize the in-flight ticket (one batched ``device_get``;
+           the only point the host blocks on the device);
+        3. retire it: decide finish reasons, release finished slots —
+           release is thereby deferred exactly one step, and the
+           final tokens are already in host memory when the slot frees;
+        4. admit — seeing the same freed slots and pages the
+           synchronous scheduler would see before this engine step.
+        """
+        finished: List[Response] = []
+        t0 = time.perf_counter()
+        overlapped = self._inflight is not None
+        if self._retired is not None:
+            retired, self._retired = self._retired, None
+            finished = self._harvest(retired)
+        t1 = time.perf_counter()
+        if overlapped:
+            self._overlap_host_s += t1 - t0
+        else:
+            self._serial_host_s += t1 - t0
+        if self._inflight is not None:
+            pend, self._inflight = self._inflight, None
+            res = self.engine.materialize(pend.ticket)
+            t2 = time.perf_counter()
+            self._materialize_wait_s += t2 - t1
+            self._retire(pend, res)
+            self._admit_ready(now)
+            self._serial_host_s += time.perf_counter() - t2
+        else:
+            self._admit_ready(now)
+            self._serial_host_s += time.perf_counter() - t1
+        return finished
+
+    def _retire(self, pend: _InflightStep, res: StepResult) -> None:
+        """Decide finishes for a just-materialized step and free slots.
+
+        The cheap, order-critical part of the harvest: budget counting,
+        finish reasons, slot + page release and the budget force-done —
+        everything admission parity with the synchronous scheduler
+        depends on.  The heavy per-slot work is deferred to ``_harvest``
+        via ``self._retired``.
+        """
+        now = self._now()
+        force_done = np.zeros((self.capacity,), bool)
+        finished: List[Tuple[int, Response, str, float]] = []
+        for slot, resp in pend.bound.items():
+            if res.done_prev[slot]:
+                continue
+            self._steps_taken[slot] += 1
+            reason = ""
+            if res.eos[slot]:
+                reason = "eos"
+            elif res.failed[slot]:
+                reason = "low_reward"
+            elif self._steps_taken[slot] >= self._budget[slot]:
+                reason = "max_steps"
+                force_done[slot] = True
+            if reason:
+                self.pool.release(slot)
+                self.engine.release_slot(slot)
+                del self._partial[slot]
+                finished.append((slot, resp, reason, now))
+        self.state = self.engine.force_done(self.state, force_done)
+        self._retired = _RetiredStep(res=res, bound=pend.bound,
+                                     finished=finished)
+
+    def _harvest(self, retired: _RetiredStep) -> List[Response]:
+        """Heavy harvest of a retired step (runs under the next step).
+
+        Appends every bound slot's step tokens to its partial response,
+        finalizes the responses whose finish reason fired, and folds the
+        step into ``stats`` — all pure host numpy on data materialized
+        before any of these slots could have been reused.
+        """
+        res = retired.res
+        for slot, resp in retired.bound.items():
+            if res.done_prev[slot]:
+                continue
+            toks = res.chosen[slot]
+            resp.steps.append(toks[toks != PAD])
+            resp.engine_steps += 1
+        done_now: List[Response] = []
+        for slot, resp, reason, at in retired.finished:
+            resp.finish_reason = reason
+            resp.finished_at = at
+            self.responses[resp.request_id] = resp
+            self.stats.bump(requests_finished=1)
+            done_now.append(resp)
+        self.engine.fold_step_stats(res, self.stats, self.collect_stats)
+        return done_now
+
+    def _dispatch(self, rng, rng_target=None) -> None:
+        """Dispatch the next engine step and leave its ticket in flight."""
+        t0 = time.perf_counter()
+        self.state, ticket = self.engine.dispatch_decode(
+            self.state, rng, rng_target)
+        self.engine_steps += 1
+        self._inflight = _InflightStep(ticket=ticket,
+                                       bound=dict(self._partial))
+        self._dispatch_s += time.perf_counter() - t0
+
+    def flush(self) -> List[Response]:
+        """Drain the pipeline without dispatching: materialize the
+        in-flight ticket (if any) and harvest everything retired.
+        Returns the responses finalized by the drain."""
+        finished: List[Response] = []
+        if self._inflight is not None:
+            pend, self._inflight = self._inflight, None
+            t0 = time.perf_counter()
+            res = self.engine.materialize(pend.ticket)
+            self._materialize_wait_s += time.perf_counter() - t0
+            self._retire(pend, res)
+        if self._retired is not None:
+            retired, self._retired = self._retired, None
+            t0 = time.perf_counter()
+            finished = self._harvest(retired)
+            self._serial_host_s += time.perf_counter() - t0
+        return finished
+
+    def pipeline_stats(self) -> Dict[str, float]:
+        """Host/device overlap accounting for the async pipeline.
+
+        ``overlap_fraction`` is the share of host *bookkeeping* time
+        (harvest + admission; dispatch enqueueing and one-off jit
+        compiles are reported separately as ``dispatch_s``) that ran
+        while an engine step was executing on the device — 0.0 for a
+        purely synchronous scheduler.  ``materialize_wait_s`` is the
+        time the host spent blocked on device results.
+        """
+        total = self._overlap_host_s + self._serial_host_s
+        return {
+            "sync": self.sync,
+            "overlap_host_s": self._overlap_host_s,
+            "serial_host_s": self._serial_host_s,
+            "materialize_wait_s": self._materialize_wait_s,
+            "dispatch_s": self._dispatch_s,
+            "overlap_fraction":
+                self._overlap_host_s / total if total > 0 else 0.0,
+        }
+
+    # ------------------------------------------------------------------
+    # Run loops
+    # ------------------------------------------------------------------
+    def _wait_next_arrival(self) -> None:
+        """Idle until the head queued request arrives (or a new submit
+        wakes us) — an exact condition-variable wait, not a capped
+        ``time.sleep`` poll, so sub-50ms arrival gaps cost exactly the
+        gap."""
+        wait = self.queue[0].arrival_time - self._now()
+        if wait > 0:
+            with self._wake:
+                self._wake.wait(timeout=wait)
 
     def run(self, rng) -> Dict[str, Response]:
         """Drain the queue and all live slots; returns id -> Response."""
         self._t0 = time.perf_counter()
+        if not self.sync:
+            return self._run_async(rng)
         while self.queue or self.pool.num_live:
             if self.pool.num_live == 0 and not self._ready(self._now()):
-                # idle until the next arrival
-                wait = self.queue[0].arrival_time - self._now()
-                if wait > 0:
-                    time.sleep(min(wait, 0.05))
+                self._wait_next_arrival()     # idle until the next arrival
                 continue
             rng, k1, k2 = jax.random.split(rng, 3)
-            self.step(k1, k2)
+            self._step_sync(k1, k2)
+        return dict(self.responses)
+
+    def _run_async(self, rng) -> Dict[str, Response]:
+        """Pipelined drain: rng is split once per *dispatched* engine
+        step (never on drain-only iterations), keeping the per-step key
+        sequence identical to the synchronous loop's."""
+        while (self.queue or self.pool.num_live or self.has_pending):
+            now = self._now()
+            if (self.pool.num_live == 0 and not self.has_pending
+                    and not self._ready(now)):
+                self._wait_next_arrival()
+                continue
+            self._pump(now)
+            if self.pool.num_live:
+                rng, k1, k2 = jax.random.split(rng, 3)
+                self._dispatch(k1, k2)
+            else:
+                self.flush()
         return dict(self.responses)
