@@ -1,0 +1,395 @@
+"""SLO load generator: mixed traffic against the serving scheduler.
+
+Where ``benchmarks/throughput.py`` measures scheduling disciplines under
+a uniform synthetic gang, this harness offers *traffic*: an arrival
+process (Poisson or bursty), a prompt-length mixture (short questions
+vs long preamble-padded prompts), and a priority mix (a slice of
+requests carries ``priority=1`` and a ``deadline_s`` SLO).  It reports
+per-priority-class p50/p95/p99 TTFT and TPOT, SLO attainment, and the
+scheduler's SLO counters (preemptions, resumes, deadline misses,
+``prefill_commit_max``), as JSON compatible with the committed
+``benchmarks/BENCH_SLO.json`` baseline.
+
+``--check`` is the CI load-smoke gate.  It asserts, deterministically:
+
+* **chunked prefill identity** — the same greedy (temperature 0)
+  workload decoded with ``chunk_tokens`` on vs off yields bit-identical
+  per-request tokens, while the largest single-step prefill commit drops
+  from the full prompt length to the chunk budget (the decode-stall gap
+  proxy: no single engine step ever commits more prompt tokens than the
+  budget, so live decode is never stalled behind a long prompt);
+* **preempt/resume round-trip** — a forced preemption (stepped scenario,
+  no wall clock) pauses a low-priority request, page conservation
+  ``free + referenced + cached == num_pages`` holds at the preempt point
+  and after the drain, and the preempted request's final tokens are
+  identical to its un-preempted greedy run;
+* **SLO thresholds** — per-class p99 TTFT and SLO attainment from the
+  timed run stay inside the committed ``BENCH_SLO.json`` envelope.
+
+    PYTHONPATH=src python -m benchmarks.loadgen --smoke --check \
+        --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.config import GSIConfig
+from repro.serving import (GSIScheduler, GSIServingEngine, TokenStream,
+                           merge_engine_stats)
+
+BASELINE = pathlib.Path(__file__).with_name("BENCH_SLO.json")
+
+
+# ----------------------------------------------------------------------
+# Workload construction
+# ----------------------------------------------------------------------
+def arrivals(count: int, *, process: str, rate: float, burst: int,
+             seed: int) -> np.ndarray:
+    """Arrival offsets (seconds, sorted) for ``count`` requests.
+
+    ``poisson``: iid exponential gaps at ``rate`` req/s.  ``bursty``:
+    groups of ``burst`` simultaneous arrivals, groups spaced at the
+    same mean inter-group rate — the adversarial case for admission
+    (every burst hits the pool at once).
+    """
+    rng = np.random.default_rng(seed)
+    if process == "poisson":
+        gaps = rng.exponential(1.0 / rate, size=count)
+        return np.cumsum(gaps)
+    if process == "bursty":
+        groups = -(-count // burst)
+        starts = np.cumsum(rng.exponential(burst / rate, size=groups))
+        return np.repeat(starts, burst)[:count]
+    raise ValueError(f"unknown arrival process {process!r}")
+
+
+def build_workload(count: int, *, seed: int = 7, process: str = "poisson",
+                   rate: float = 40.0, burst: int = 4,
+                   long_frac: float = 0.25, hi_frac: float = 0.25,
+                   deadline_s: float = 300.0, pre_len: int = 34,
+                   max_steps: int = 4):
+    """``count`` requests with mixed lengths, priorities and deadlines.
+
+    Long prompts carry a shared ``pre_len``-token preamble (so chunked
+    prefill has something to chunk and the radix cache something to
+    share); high-priority requests (``priority=1``) carry ``deadline_s``.
+    Returns a list of dicts consumable by :func:`run_workload`.
+    """
+    task = common.get_task()
+    task.rng = np.random.default_rng(seed)
+    rng = np.random.default_rng(seed + 1)
+    offs = arrivals(count, process=process, rate=rate, burst=burst,
+                    seed=seed + 2)
+    from repro.data.synthetic import D0
+    pre = np.asarray([D0 + (i % 10) for i in range(pre_len)], np.int32)
+    reqs = []
+    for i in range(count):
+        q = np.asarray(task.sample_problem().prompt, np.int32)
+        long = rng.random() < long_frac
+        hi = rng.random() < hi_frac
+        reqs.append({
+            "id": f"lg-{i}",
+            "prompt": np.concatenate([pre, q]) if long else q,
+            "arrival": float(offs[i]),
+            "priority": 1 if hi else 0,
+            "deadline_s": deadline_s if hi else None,
+            "max_steps": max_steps,
+        })
+    return reqs
+
+
+# ----------------------------------------------------------------------
+# Driving + metrics
+# ----------------------------------------------------------------------
+def make_engine(*, max_steps: int = 4, page_size: int = 16,
+                temperature: float = 0.0, num_pages: int = 0,
+                **gkw) -> GSIServingEngine:
+    """A fresh paged + radix-cache engine over the shared trained triple.
+
+    Fresh per run: the page pool and radix index are engine-held host
+    state, and cross-run cache warmth would contaminate TTFT numbers.
+    Extra keywords override :class:`GSIConfig` fields.
+    """
+    cfgs, params = common.get_triple()
+    kw = dict(n=2, beta=8.0, threshold_u=0.4, max_step_tokens=8,
+              max_steps=max_steps, min_step_reward=0.0,
+              temperature=temperature)
+    kw.update(gkw)
+    g = GSIConfig(**kw)
+    return GSIServingEngine(*cfgs, *params, g, mode="gsi", max_seq=112,
+                            paged=True, page_size=page_size,
+                            num_pages=num_pages)
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else float("nan")
+
+
+def run_workload(reqs, *, capacity: int, chunk_tokens: int = 0,
+                 sync: bool = True, realtime: bool = True,
+                 stream_every: int = 0, seed: int = 0):
+    """Serve ``reqs`` on one fresh engine; returns the metrics report.
+
+    ``realtime=False`` zeroes every arrival offset (pure token-identity
+    runs, no wall-clock dependence).  ``stream_every=k`` attaches a
+    :class:`TokenStream` to every k-th request and verifies the streamed
+    tokens reassemble that request's response exactly.
+    """
+    eng = make_engine(max_steps=max(r["max_steps"] for r in reqs))
+    sched = GSIScheduler(eng, capacity=capacity, cache_aware=True,
+                         sync=sync, chunk_tokens=chunk_tokens)
+    streams = {}
+    for i, r in enumerate(reqs):
+        stream = None
+        if stream_every and i % stream_every == 0:
+            stream = streams[r["id"]] = TokenStream()
+        sched.submit(r["prompt"], request_id=r["id"],
+                     max_steps=r["max_steps"],
+                     arrival_time=r["arrival"] if realtime else 0.0,
+                     priority=r["priority"], deadline_s=r["deadline_s"],
+                     stream=stream)
+    out = sched.run(jax.random.PRNGKey(seed))
+    for rid, ts in streams.items():
+        events = list(ts)
+        got = [t for e in events for t in e.tokens.tolist()]
+        assert got == out[rid].tokens.tolist(), \
+            f"stream drift for {rid}: {got} != {out[rid].tokens.tolist()}"
+        assert events[-1].final, f"stream for {rid} never closed"
+    stats = merge_engine_stats([sched.stats])
+    classes = {}
+    for prio in sorted({r["priority"] for r in reqs}):
+        rs = [out[r["id"]] for r in reqs if r["priority"] == prio]
+        ttft = [r.ttft for r in rs if not math.isnan(r.ttft)]
+        tpot = [r.tpot for r in rs if not math.isnan(r.tpot)]
+        with_slo = [r for r in rs if r.deadline_s is not None]
+        classes[str(prio)] = {
+            "requests": len(rs),
+            "ttft_s": {q: _pct(ttft, p)
+                       for q, p in (("p50", 50), ("p95", 95), ("p99", 99))},
+            "tpot_s": {q: _pct(tpot, p)
+                       for q, p in (("p50", 50), ("p95", 95), ("p99", 99))},
+            "slo_requests": len(with_slo),
+            "slo_attainment": (
+                sum(not r.deadline_missed for r in with_slo)
+                / len(with_slo)) if with_slo else None,
+        }
+    pager = eng.pager
+    report = {
+        "capacity": capacity, "chunk_tokens": chunk_tokens, "sync": sync,
+        "requests": len(reqs),
+        "engine_steps": sched.engine_steps,
+        "classes": classes,
+        "counters": {
+            "preemptions": stats.preemptions,
+            "resumes": stats.resumes,
+            "deadline_misses": stats.deadline_misses,
+            "prefill_commit_max": stats.prefill_commit_max,
+            "prefix_hits": stats.prefix_hits,
+        },
+        "pages": {
+            "free": pager.num_free, "cached": pager.num_cached,
+            "total": eng.num_pages,
+            "conserved": pager.num_free + pager.num_cached
+            == eng.num_pages,
+        },
+    }
+    report["token_lists"] = {r["id"]: out[r["id"]].tokens.tolist()
+                             for r in reqs}
+    return report
+
+
+# ----------------------------------------------------------------------
+# Deterministic forced-preemption scenario (no wall clock)
+# ----------------------------------------------------------------------
+def forced_preempt(*, page_size: int = 16):
+    """Low-priority request decodes alone, then a high-priority long
+    prompt lands on a capacity-1 pool: admission must pause the victim,
+    serve the newcomer, and resume the victim from its published pages.
+
+    Returns the two runs' token lists plus the invariant probes.
+    """
+    task = common.get_task()
+    task.rng = np.random.default_rng(3)
+    from repro.data.synthetic import D0
+    # distinct preambles; the victim's must span >= 1 full page so its
+    # pause publishes pages the resume can actually splice back
+    pre_lo = np.asarray([D0 + (i % 10) for i in range(34)], np.int32)
+    pre_hi = np.asarray([D0 + ((3 + i) % 10) for i in range(34)],
+                        np.int32)
+    low = np.concatenate([pre_lo,
+                          np.asarray(task.sample_problem().prompt,
+                                     np.int32)])
+    high = np.concatenate([pre_hi,
+                           np.asarray(task.sample_problem().prompt,
+                                      np.int32)])
+    # both runs pin the full step budget (no EOS, no reward early-stop):
+    # the victim must still be decoding when the high-priority request
+    # lands, whatever the trained triple would answer.  A roomy page
+    # pool keeps the victim's published pages from being evicted before
+    # its resume (the radix-splice probe needs them cached).
+    mk = dict(eos_token_id=-1, min_step_reward=-1e9, num_pages=16)
+    # baseline: both requests, roomy pool, no contention → no preemption
+    eng = make_engine(**mk)
+    sched = GSIScheduler(eng, capacity=2, cache_aware=True)
+    sched.submit(low, request_id="low", max_steps=4, priority=0)
+    sched.submit(high, request_id="high", max_steps=4, priority=1)
+    base = {k: v.tokens.tolist()
+            for k, v in sched.run(jax.random.PRNGKey(0)).items()}
+    # contended: capacity 1; low runs first, high arrives mid-decode
+    eng = make_engine(**mk)
+    sched = GSIScheduler(eng, capacity=1, cache_aware=True)
+    sched.submit(low, request_id="low", max_steps=4, priority=0)
+    rng = jax.random.PRNGKey(0)
+    rng, k1, k2 = jax.random.split(rng, 3)
+    sched.step(k1, k2)
+    sched.submit(high, request_id="high", max_steps=4, priority=1)
+    rng, k1, k2 = jax.random.split(rng, 3)
+    sched.step(k1, k2)              # admission preempts low for high
+    conserved_mid = (eng.pager.num_free + eng.pager.num_referenced
+                     + eng.pager.num_cached == eng.num_pages)
+    while sched.queue or sched.pool.num_live or sched.has_pending:
+        rng, k1, k2 = jax.random.split(rng, 3)
+        sched.step(k1, k2)
+    got = {k: v.tokens.tolist() for k, v in sched.responses.items()}
+    return {
+        "base": base, "got": got,
+        "preemptions": sched.stats.preemptions,
+        "resumes": sched.stats.resumes,
+        "resume_prefix_hits": sched.stats.prefix_hits,
+        "victim_preemptions": sched.responses["low"].preemptions,
+        "conserved_mid": conserved_mid,
+        "conserved_end": eng.pager.num_free + eng.pager.num_cached
+        == eng.num_pages,
+    }
+
+
+# ----------------------------------------------------------------------
+# The CI gate
+# ----------------------------------------------------------------------
+def check(report_chunked, report_plain, pre_report, baseline_path):
+    """Assert the --check contract (see module docstring)."""
+    # (a) chunked prefill is a pacing change, not an algorithm change
+    assert report_chunked["token_lists"] == report_plain["token_lists"], \
+        "chunked prefill drifted: tokens != unchunked greedy run"
+    chunk = report_chunked["chunk_tokens"]
+    got = report_chunked["counters"]["prefill_commit_max"]
+    assert 0 < got <= chunk, \
+        f"chunked run committed {got} prompt tokens in one step " \
+        f"(budget {chunk})"
+    plain = report_plain["counters"]["prefill_commit_max"]
+    assert plain > chunk, \
+        f"workload too short to exercise chunking: unchunked max " \
+        f"single-step commit {plain} <= budget {chunk}"
+    for rep in (report_chunked, report_plain):
+        assert rep["pages"]["conserved"], f"page leak: {rep['pages']}"
+    # (b) preempt == pause: identical tokens, conserved pages, radix resume
+    assert pre_report["preemptions"] >= 1, "no preemption was forced"
+    assert pre_report["resumes"] >= 1, "victim never resumed"
+    assert pre_report["victim_preemptions"] >= 1, \
+        "victim response does not record its preemption"
+    assert pre_report["conserved_mid"] and pre_report["conserved_end"], \
+        "page conservation violated across preempt/resume"
+    assert pre_report["got"] == pre_report["base"], \
+        f"preempt/resume drifted: {pre_report['got']} != " \
+        f"{pre_report['base']}"
+    assert pre_report["resume_prefix_hits"] >= 1, \
+        "resume did not splice the victim's published pages"
+    # (c) the committed SLO envelope
+    with open(baseline_path) as fh:
+        env = json.load(fh)
+    for prio, th in env["thresholds"]["classes"].items():
+        cls = report_chunked["classes"].get(prio)
+        assert cls is not None, f"no class {prio} in the timed run"
+        p99 = cls["ttft_s"]["p99"]
+        assert p99 <= th["p99_ttft_s_max"], \
+            f"class {prio} p99 TTFT {p99:.3f}s exceeds baseline " \
+            f"{th['p99_ttft_s_max']}s"
+        if th.get("slo_attainment_min") is not None:
+            att = cls["slo_attainment"]
+            assert att is not None and att >= th["slo_attainment_min"], \
+                f"class {prio} SLO attainment {att} below baseline " \
+                f"{th['slo_attainment_min']}"
+    assert report_chunked["counters"]["prefill_commit_max"] <= \
+        env["thresholds"]["chunk_commit_max"], "chunk budget regressed"
+    print("# loadgen check passed", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny training budget, small workload")
+    ap.add_argument("--check", action="store_true",
+                    help="assert chunked==unchunked greedy tokens, "
+                         "preemption page conservation + identity, and "
+                         "the BENCH_SLO.json thresholds")
+    ap.add_argument("--json", type=str, default="",
+                    help="write the full report JSON here")
+    ap.add_argument("--baseline", type=str, default=str(BASELINE))
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--capacity", type=int, default=3)
+    ap.add_argument("--chunk-tokens", type=int, default=16)
+    ap.add_argument("--process", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="mean arrival rate, requests/second")
+    ap.add_argument("--burst", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    args.fast = args.fast or args.smoke
+    common.FAST, common.SMOKE = args.fast, args.smoke
+    count = args.requests or (10 if args.smoke else 16 if args.fast
+                              else 32)
+    reqs = build_workload(count, seed=args.seed, process=args.process,
+                          rate=args.rate, burst=args.burst)
+    print(f"# loadgen: {count} requests, {args.process} arrivals @ "
+          f"{args.rate}/s, capacity {args.capacity}, chunk "
+          f"{args.chunk_tokens}", flush=True)
+    timed = run_workload(reqs, capacity=args.capacity,
+                         chunk_tokens=args.chunk_tokens, sync=False,
+                         stream_every=4, seed=args.seed)
+    for prio, cls in timed["classes"].items():
+        t, o = cls["ttft_s"], cls["tpot_s"]
+        print(f"class {prio}: n={cls['requests']} "
+              f"ttft p50/p95/p99 = {t['p50']:.3f}/{t['p95']:.3f}/"
+              f"{t['p99']:.3f}s  tpot p50 = {o['p50'] * 1e3:.1f}ms  "
+              f"slo_attainment = {cls['slo_attainment']}", flush=True)
+    print(f"counters: {timed['counters']}  pages: {timed['pages']}",
+          flush=True)
+    report = {"timed": timed}
+    if args.check:
+        plain = run_workload(reqs, capacity=args.capacity, chunk_tokens=0,
+                             realtime=False, seed=args.seed)
+        chunked = run_workload(reqs, capacity=args.capacity,
+                               chunk_tokens=args.chunk_tokens,
+                               realtime=False, seed=args.seed)
+        pre = forced_preempt()
+        report["identity"] = {
+            "chunked_commit_max":
+                chunked["counters"]["prefill_commit_max"],
+            "unchunked_commit_max":
+                plain["counters"]["prefill_commit_max"],
+        }
+        report["preempt"] = {k: v for k, v in pre.items()
+                             if k not in ("base", "got")}
+        # the timed run carries the SLO numbers the envelope gates on,
+        # plus the same chunk budget — check thresholds against it
+        check({**chunked, "classes": timed["classes"]}, plain, pre,
+              args.baseline)
+    for rep in report.values():           # tokens are check-only payload
+        rep.pop("token_lists", None)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+        print(f"# report written to {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

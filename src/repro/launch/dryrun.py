@@ -1,10 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# chunked-parallel WKV for lowering (see models/rwkv.py::_use_chunked):
-# the per-token sequential scan is exact but compiles pathologically when
-# layers are unrolled, and XLA cost-analysis can't see through its loop.
-os.environ.setdefault("REPRO_RWKV_CHUNKED", "1")
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
 
 For each combination this builds the real jitted program (train_step /
@@ -18,10 +11,18 @@ cost analysis and the roofline terms (repro.roofline).
     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
         --out results/dryrun.json
 
-NOTE: the XLA_FLAGS line above must run before ANY jax import (jax locks
+NOTE: the XLA_FLAGS line below must run before ANY jax import (jax locks
 the device count on first init); do not import this module from processes
 that need the single real CPU device.
 """
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# chunked-parallel WKV for lowering (see models/rwkv.py::_use_chunked):
+# the per-token sequential scan is exact but compiles pathologically when
+# layers are unrolled, and XLA cost-analysis can't see through its loop.
+os.environ.setdefault("REPRO_RWKV_CHUNKED", "1")
+
 import argparse
 import dataclasses
 import json
@@ -48,11 +49,13 @@ LONG_WINDOW = 4096  # sliding-window variant for full-attention archs
 
 
 def is_native_subquadratic(cfg: ModelConfig) -> bool:
+    """True if the arch scales sub-quadratically in context natively."""
     return cfg.family in ("ssm", "hybrid") or "local" in cfg.layer_pattern
 
 
 def arch_for_shape(cfg: ModelConfig, shape_name: str,
                    *, scan_layers: bool = False) -> ModelConfig:
+    """Shape-specific config transform applied before lowering."""
     if shape_name == "long_500k" and not is_native_subquadratic(cfg):
         # DESIGN.md §4: dense/full-attention archs serve long context with
         # the sliding-window variant (ring KV cache of LONG_WINDOW).
@@ -168,6 +171,7 @@ def _compile_record(cfg, shape_name, mesh, chips, name, *,
 
 def run_one(arch: str, shape_name: str, mesh_kind: str,
             *, keep_hlo: bool = False) -> dict:
+    """Lower + compile one (arch, shape, mesh) combo; returns the record."""
     cfg = get_config(arch)
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     chips = mesh.devices.size
@@ -230,6 +234,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
 
 
 def main() -> None:
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

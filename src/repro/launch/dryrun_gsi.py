@@ -1,6 +1,3 @@
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
-
 """Dry-run of the GSI serving phases at paper scale (hillclimb target #3).
 
 Lowers the *target-scoring* pass of Algorithm 1 — compute log pi_B(y_i|x)
@@ -17,7 +14,15 @@ Also lowers the fused "tilted select" epilogue (rewards + logp -> softmax
 sample + threshold), which is negligible but completes Algorithm 1.
 
     PYTHONPATH=src python -m repro.launch.dryrun_gsi --out results/gsi.json
+
+NOTE: the XLA_FLAGS line below must run before ANY jax import (jax locks
+the device count on first init).
 """
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
 import argparse
 import dataclasses
 import json
@@ -44,6 +49,10 @@ B, N, L, CTX = 16, 16, 128, 2048
 
 def build(kind: str, mesh, arch: str = "qwen2.5-math-7b",
           scan_layers: bool = True):
+    """Build the lowerable scoring fn for ``kind`` (baseline|shared|select).
+
+    Returns ``(fn, args, in_shardings, cfg)`` ready for jit + lower.
+    """
     cfg = dataclasses.replace(get_config(arch), scan_layers=scan_layers)
     model = build_model(cfg)
     spec_tree = model.param_specs()
@@ -101,6 +110,7 @@ def build(kind: str, mesh, arch: str = "qwen2.5-math-7b",
 
 
 def run_one(kind: str, mesh_kind: str = "single") -> dict:
+    """Lower + compile one scoring kind; returns its analysis record."""
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     rec = {"kind": kind, "mesh": mesh_kind, "status": "error"}
     t0 = time.time()
@@ -126,6 +136,7 @@ def run_one(kind: str, mesh_kind: str = "single") -> dict:
 
 
 def main() -> None:
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="results/gsi_dryrun.json")
     ap.add_argument("--kinds", default="baseline,shared")

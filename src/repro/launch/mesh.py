@@ -14,12 +14,14 @@ from repro.config import MULTI_POD, SINGLE_POD, MeshConfig
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The 256-chip single-pod (or 512-chip two-pod) production mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
 def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    """The :class:`MeshConfig` matching :func:`make_production_mesh`."""
     return MULTI_POD if multi_pod else SINGLE_POD
 
 

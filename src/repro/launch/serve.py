@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -30,6 +31,39 @@ from repro.serving import GSIScheduler, GSIServingEngine, ReplicaRouter
 from repro.serving.router import HASH_TIERS, POLICIES
 from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
 from repro.train import Trainer
+
+
+#: XLA / allocator environment tuning (the olmax ``run.sh`` recipe):
+#: a single host platform device (no fake TPU-CPU fan-out), step markers
+#: at the outer while loop so profiles attribute whole decode steps, a
+#: bounded preallocation fraction instead of the 75%-and-grow default,
+#: and quiet allocator large-alloc warnings.  ``setdefault`` semantics —
+#: anything the operator already exported wins.
+TUNED_ENV = {
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=1 "
+                 "--xla_step_marker_location="
+                 "STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP",
+    "XLA_PYTHON_CLIENT_MEM_FRACTION": "0.8",
+    "XLA_PYTHON_CLIENT_PREALLOCATE": "false",
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+    "TF_CPP_MIN_LOG_LEVEL": "4",
+}
+
+
+def apply_tuned_env(env=None) -> dict:
+    """Apply :data:`TUNED_ENV` to ``os.environ`` (or ``env``) and return
+    the settings actually applied (operator-exported values win).
+
+    Must run before the first ``import jax`` *use* touches a backend —
+    XLA reads these at client construction, so ``--tuned-env`` applies
+    them at the very top of ``main`` and prints the result.
+    """
+    target = os.environ if env is None else env
+    applied = {}
+    for key, val in TUNED_ENV.items():
+        if target.setdefault(key, val) == val:
+            applied[key] = val
+    return applied
 
 
 def toy_triple(vocab: int = 16):
@@ -80,7 +114,8 @@ def evaluate(engine, task, problems, rng):
 
 def make_frontend(engines, *, capacity: int, continuous: bool = True,
                   collect_stats: bool = False, policy: str = "affinity",
-                  sync: bool = True, hash_tier: str = "mod"):
+                  sync: bool = True, hash_tier: str = "mod",
+                  chunk_tokens: int = 0):
     """One serving frontend over one or many engines.
 
     A single engine (or a 1-list) gets a plain :class:`GSIScheduler`;
@@ -88,7 +123,8 @@ def make_frontend(engines, *, capacity: int, continuous: bool = True,
     replicas of ``capacity`` slots each, routed by ``policy`` (tier-2
     preamble hashing per ``hash_tier``).  ``sync=False`` selects the
     pipelined decode loop (and, for routers, the thread-per-replica
-    fleet loop).  Both frontends expose the same
+    fleet loop); ``chunk_tokens`` meters prompt prefill (chunked
+    prefill, 0 = unmetered).  Both frontends expose the same
     submit()/run()/stats/prefix_stats()/pipeline_stats() surface.
     """
     if isinstance(engines, GSIServingEngine):
@@ -96,16 +132,20 @@ def make_frontend(engines, *, capacity: int, continuous: bool = True,
     if len(engines) == 1:
         return GSIScheduler(engines[0], capacity=capacity,
                             continuous=continuous,
-                            collect_stats=collect_stats, sync=sync)
+                            collect_stats=collect_stats, sync=sync,
+                            chunk_tokens=chunk_tokens)
     return ReplicaRouter(engines, capacity=capacity, policy=policy,
                          continuous=continuous,
                          collect_stats=collect_stats, sync=sync,
-                         threaded=not sync, hash_tier=hash_tier)
+                         threaded=not sync, hash_tier=hash_tier,
+                         chunk_tokens=chunk_tokens)
 
 
 def evaluate_queued(engine, task, problems, rng, *, capacity: int,
                     continuous: bool = True, policy: str = "affinity",
-                    sync: bool = True, hash_tier: str = "mod"):
+                    sync: bool = True, hash_tier: str = "mod",
+                    chunk_tokens: int = 0, priority_every: int = 0,
+                    deadline_s=None, stream=None):
     """Queued evaluation through the continuous-batching scheduler.
 
     All requests are submitted up front (offered load >= capacity); the
@@ -113,13 +153,23 @@ def evaluate_queued(engine, task, problems, rng, *, capacity: int,
     prompts into freed slots.  ``engine`` may also be a list of engines —
     one per data-parallel replica, fronted by a :class:`ReplicaRouter`
     with ``policy`` placement.  ``sync=False`` serves through the async
-    pipeline (identical tokens, overlapped host work).  Returns accuracy
-    plus throughput/latency.
+    pipeline (identical tokens, overlapped host work).
+
+    ``priority_every=k`` submits every k-th request at priority 1 (with
+    ``deadline_s`` as its SLO), arming preemption; ``stream`` attaches a
+    token-stream callback to the first request.  Returns accuracy plus
+    throughput/latency.
     """
     sched = make_frontend(engine, capacity=capacity, continuous=continuous,
                           collect_stats=True, policy=policy, sync=sync,
-                          hash_tier=hash_tier)
-    ids = [sched.submit(np.asarray(p.prompt, np.int32)) for p in problems]
+                          hash_tier=hash_tier, chunk_tokens=chunk_tokens)
+    ids = []
+    for i, p in enumerate(problems):
+        hi = bool(priority_every) and i % priority_every == 0
+        ids.append(sched.submit(np.asarray(p.prompt, np.int32),
+                                priority=1 if hi else 0,
+                                deadline_s=deadline_s if hi else None,
+                                stream=stream if i == 0 else None))
     t0 = time.time()
     results = sched.run(rng)
     wall = time.time() - t0
@@ -131,18 +181,25 @@ def evaluate_queued(engine, task, problems, rng, *, capacity: int,
         tokens += resp.num_tokens
         latencies.append(resp.latency)
     lat = np.sort(np.asarray(latencies)) if latencies else np.zeros(1)
+    ttft = [results[r].ttft for r in ids
+            if not np.isnan(results[r].ttft)]
     return {"accuracy": correct / len(problems),
             "accept_rate": sched.stats.accept_rate,
             "steps": sched.engine_steps, "wall_s": wall,
             "tokens": tokens, "tokens_per_s": tokens / max(wall, 1e-9),
             "latency_p50": float(np.percentile(lat, 50)),
             "latency_p95": float(np.percentile(lat, 95)),
+            "ttft_p50": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "preemptions": sched.stats.preemptions,
+            "deadline_misses": sched.stats.deadline_misses,
+            "prefill_commit_max": sched.stats.prefill_commit_max,
             "prefix": sched.prefix_stats(),
             "pipeline": sched.pipeline_stats(),
             "stats": sched.stats, "responses": results}
 
 
 def main() -> None:
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--n", type=int, default=4)
@@ -184,8 +241,32 @@ def main() -> None:
     grp.add_argument("--sync", dest="sync", action="store_true",
                      help="lock-step serving loop (identical tokens)")
     ap.set_defaults(sync=False)
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="per-step prefill token budget (chunked "
+                         "prefill; 0 = admit whole prompts at once)")
+    ap.add_argument("--priority", type=int, default=0, metavar="K",
+                    help="submit every K-th request at priority 1 "
+                         "(arms preemption of priority-0 slots under "
+                         "pressure; 0 = uniform priority)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="SLO deadline (seconds, arrival->finish) "
+                         "attached to the priority-1 requests")
+    ap.add_argument("--stream", action="store_true",
+                    help="print the first request's tokens as they are "
+                         "harvested (per-step streaming callback)")
+    ap.add_argument("--tuned-env", action="store_true",
+                    help="apply the XLA/allocator env tuning "
+                         "(XLA_FLAGS step markers + single host device, "
+                         "bounded client mem fraction) before serving "
+                         "and print what was applied")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.tuned_env:
+        applied = apply_tuned_env()
+        for key in sorted(TUNED_ENV):
+            mark = "applied" if key in applied else "kept"
+            print(f"tuned-env [{mark}] {key}={os.environ[key]}",
+                  flush=True)
 
     task = SyntheticReasoningTask(seed=args.seed)
     draft_cfg, target_cfg, prm_cfg = toy_triple()
@@ -210,12 +291,28 @@ def main() -> None:
         for _ in range(args.replicas)]
     engine = engines[0]
     problems = [task.sample_problem() for _ in range(args.requests)]
+
+    def _print_stream(event):
+        tag = f"[{event.finish_reason}]" if event.final \
+            else " ".join(map(str, event.tokens.tolist()))
+        print(f"stream {event.request_id} step {event.step}: {tag}",
+              flush=True)
+
     res = evaluate_queued(engines if args.replicas > 1 else engine,
                           task, problems,
                           jax.random.PRNGKey(args.seed + 1),
                           capacity=capacity, continuous=not args.gang,
                           policy=args.router, sync=args.sync,
-                          hash_tier=args.hash_tier)
+                          hash_tier=args.hash_tier,
+                          chunk_tokens=args.chunk_tokens,
+                          priority_every=args.priority,
+                          deadline_s=args.deadline or None,
+                          stream=_print_stream if args.stream else None)
+    if args.priority or args.chunk_tokens:
+        print(f"slo: preemptions={res['preemptions']} "
+              f"deadline_misses={res['deadline_misses']} "
+              f"prefill_commit_max={res['prefill_commit_max']} "
+              f"ttft_p50={res['ttft_p50']*1e3:.0f}ms", flush=True)
     if args.paged:
         rep = engine.cache_memory_report(capacity)
         print(f"paged cache: {rep['num_pages']} pages x "

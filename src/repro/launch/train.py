@@ -29,6 +29,7 @@ from repro.train import make_train_step
 
 
 def main() -> None:
+    """CLI entry point (see module docstring for usage)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=200)

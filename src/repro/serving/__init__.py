@@ -29,6 +29,6 @@ from repro.serving.router import (ReplicaRouter, POLICIES,  # noqa: F401
                                   HASH_TIERS, preamble_hash,
                                   preamble_rendezvous)
 from repro.serving.scheduler import (GSIScheduler, Request,  # noqa: F401
-                                     Response)
+                                     Response, StreamEvent, TokenStream)
 from repro.serving.slots import (SlotPool, pack_prompts,  # noqa: F401
                                  pack_tails)

@@ -134,6 +134,13 @@ class EngineStats:
     prefix_pages_reused: int = 0  # cached/shared pages spliced into tables
     prefill_tokens: int = 0       # prompt tokens actually prefill-committed
     pages_evicted: int = 0        # cached pages evicted to admit (LRU)
+    # SLO-aware scheduling counters (priority preemption + chunked prefill)
+    preemptions: int = 0          # live slots paused for a higher priority
+    resumes: int = 0              # paused requests re-admitted
+    deadline_misses: int = 0      # finished requests past their deadline_s
+    # largest prompt-token count committed by a single jitted admit/extend
+    # call — the decode-stall proxy chunked prefill bounds (merged with max)
+    prefill_commit_max: int = 0
     # per-step trace arrays are bounded: at most ``trace_limit`` arrays are
     # retained per trace, while running moments keep exact aggregate
     # mean/variance for arbitrarily long serving runs (collect_stats=True
@@ -223,11 +230,15 @@ def merge_engine_stats(parts: Sequence[EngineStats]) -> EngineStats:
     counters = ("steps", "accepted", "decisions", "draft_tokens",
                 "target_tokens", "requests_finished", "prefix_queries",
                 "prefix_hits", "prefix_hit_tokens", "prefix_pages_reused",
-                "prefill_tokens", "pages_evicted")
+                "prefill_tokens", "pages_evicted", "preemptions",
+                "resumes", "deadline_misses")
     for p in parts:
         with p._lock:
             for f in counters:
                 setattr(out, f, getattr(out, f) + getattr(p, f))
+            # a max, not a sum: the fleet's worst single prefill commit
+            out.prefill_commit_max = max(out.prefill_commit_max,
+                                         p.prefill_commit_max)
             for trace in ("tilted_rewards", "raw_rewards", "logp_ratio"):
                 lst = getattr(out, trace)
                 lst.extend(getattr(p, trace)[:max(out.trace_limit
@@ -306,6 +317,7 @@ class GSIServingEngine:
         self._jit_step = jax.jit(self._decode_core)
         self._jit_commit = jax.jit(self._commit)
         self._jit_admit = jax.jit(self._admit)
+        self._jit_extend = jax.jit(self._extend)
         # standalone phase jits: not on the decode path (the fused
         # _decode_core is), kept for phase-level tests and debugging
         self._jit_draft_phase = jax.jit(self._draft_phase)
@@ -663,7 +675,7 @@ class GSIServingEngine:
             out["gen"] = state["gen"]
         return out
 
-    def _admit(self, state, admit_mask, tails, starts):
+    def _admit(self, state, admit_mask, tails, starts, live):
         """Prefill prompt *tails* (B,Lt; PAD-padded) into the slots where
         ``admit_mask`` is True; every other slot passes through untouched.
 
@@ -676,6 +688,12 @@ class GSIServingEngine:
         the matched prefix already living in spliced pages below
         ``starts``), and the unmatched tail is teacher-forced through all
         three models via the regular commit path with ``row_live`` masking.
+
+        ``live`` (B,) marks which admitted rows hold their *whole* prompt:
+        those come up decoding (done=False).  A chunked-prefill admission
+        passes ``live=False`` — the row stays device-done (inert under the
+        decode masks) until :meth:`extend` commits its final chunk, so live
+        neighbours keep decoding while the long prompt trickles in.
         """
         caches = reset_cache_rows(state["caches"], admit_mask)
         new = {
@@ -683,12 +701,28 @@ class GSIServingEngine:
             "pending": jnp.where(admit_mask, tails[:, 0],
                                  state["pending"]),
             "pos": jnp.where(admit_mask, starts, state["pos"]),
-            "done": jnp.where(admit_mask, False, state["done"]),
+            "done": jnp.where(admit_mask, ~live, state["done"]),
         }
         if "pt" in state:
             new["pt"], new["scratch"] = state["pt"], state["scratch"]
             new["gen"] = state["gen"]
         return self._commit(new, tails[:, 1:], row_live=admit_mask)
+
+    def _extend(self, state, mask, chunks, live):
+        """Commit continuation prefill ``chunks`` (B,W; PAD-padded) into
+        mid-prefill slots where ``mask`` is True (chunked prefill).
+
+        Each masked row's chunk is the next run of its prompt tokens: the
+        regular commit path teacher-forces ``pending`` + ``chunks[:, :-1]``
+        and leaves the chunk's last token pending — after the final chunk
+        the row satisfies the same invariant a one-shot admit establishes
+        (cache holds prompt[:-1], pending == prompt[-1], pos == len-1).
+        ``live`` flips rows whose final chunk this is to done=False; rows
+        mid-prefill stay device-done and inert under the decode masks.
+        """
+        new = self._commit(state, chunks, row_live=mask)
+        new["done"] = jnp.where(mask, ~live, state["done"])
+        return new
 
     def _branch(self, cache, n, state):
         """n scratch branches of a committed cache: dense n-way copy, or
@@ -947,7 +981,7 @@ class GSIServingEngine:
         return state, res
 
     def admit(self, state, admit_mask: np.ndarray, prompts: np.ndarray,
-              starts=None):
+              starts=None, live=None):
         """Scheduler API: prefill ``prompts`` (B,Lp) into masked slots.
 
         ``starts`` (B,) gives each admitted slot's prefix-cache match
@@ -958,10 +992,19 @@ class GSIServingEngine:
         *after* the prefill commit is ordered on the device stream — a
         request admitted on the same step can never match pages whose
         content is still being written.
+
+        ``live`` (B,) bool (default all-True) marks rows admitted with
+        their whole prompt.  Chunked prefill admits a *truncated* prompt
+        with ``live=False``: the row stays device-done (inert) and the
+        scheduler streams the rest in with :meth:`extend`.  The caller's
+        page claim must cover the full prompt either way (``claim_slot``
+        with the real prompt length).
         """
         admit_mask = np.asarray(admit_mask, bool)
         prompts = np.asarray(prompts, np.int32)
         B = prompts.shape[0]
+        live_np = np.ones((B,), bool) if live is None \
+            else np.asarray(live, bool)
         starts_np = np.zeros((B,), np.int32) if starts is None \
             else np.asarray(starts, np.int32).copy()
         publish = []
@@ -1001,17 +1044,95 @@ class GSIServingEngine:
         tails = pack_tails(prompts, starts_np)
         out = self._with_gen(
             self._jit_admit(state, jnp.asarray(admit_mask),
-                            jnp.asarray(tails), jnp.asarray(starts_np)),
+                            jnp.asarray(tails), jnp.asarray(starts_np),
+                            jnp.asarray(live_np)),
             state)
         for tokens, slot, full in publish:
             self.pager.publish(tokens, self.pager.assigned[slot][:full])
         # refresh the host mirrors: an admitted slot ends the prefill at
-        # pos == len(prompt) - 1 with pending == prompt[-1], live
+        # pos == len(prompt) - 1 with pending == prompt[-1]; it is live
+        # unless this was a partial (chunked) admission
         lengths = (prompts != PAD).sum(axis=1)
         admitted = np.nonzero(admit_mask)[0]
         self._known_pos[admitted] = np.maximum(lengths[admitted] - 1, 0)
-        self._known_done[admitted] = False
+        self._known_done[admitted] = ~live_np[admitted]
         return out
+
+    def extend(self, state, mask: np.ndarray, chunks: np.ndarray,
+               live: np.ndarray):
+        """Scheduler API: commit continuation prefill chunks (chunked
+        prefill) into mid-prefill slots.
+
+        ``chunks`` (B,W; PAD-padded) holds each masked slot's next run of
+        prompt tokens; ``live`` marks the rows whose final chunk this is
+        (they come up decoding).  Pages for the chunk's positions are
+        drawn lazily from the slot's admission claim, and the host
+        ``pos``/``done`` mirrors advance so a pipelined dispatch keeps
+        assigning pages without touching device state.  Publication of
+        the prompt's full pages stays the *scheduler's* job (via
+        :meth:`publish_prefix` after the final chunk): mid-prefill pages
+        become matchable only once their content commit is ordered.
+        """
+        mask = np.asarray(mask, bool)
+        chunks = np.asarray(chunks, np.int32)
+        live_np = np.asarray(live, bool)
+        lengths = (chunks != PAD).sum(axis=1)
+        if self.paged:
+            self._check_gen(state)
+            state = self._flush_released(state)
+            wants = {}
+            for slot in np.nonzero(mask)[0]:
+                slot = int(slot)
+                # the chunk commits positions pos .. pos+len-1 plus the
+                # benign garbage write at the new pos
+                need = int(self._known_pos[slot]) + int(lengths[slot]) + 1
+                wants[slot] = min(self.nblk,
+                                  self.pager.max_blocks(slot),
+                                  pages_for(need, self.page_size))
+            state = self._ensure_blocks(state, wants)
+        out = self._with_gen(
+            self._jit_extend(state, jnp.asarray(mask),
+                             jnp.asarray(chunks), jnp.asarray(live_np)),
+            state)
+        sel = np.nonzero(mask)[0]
+        self._known_pos[sel] = self._known_pos[sel] + lengths[sel]
+        self._known_done[sel] = ~live_np[sel]
+        return out
+
+    def publish_prefix(self, slot: int, tokens) -> int:
+        """Publish ``slot``'s full committed pages of ``tokens`` to the
+        radix index; returns the pages newly retained.
+
+        ``tokens`` is the slot's committed context (prompt, or prompt +
+        generated steps at preemption); per the engine invariant its last
+        token is pending, so exactly ``(len - 1) // page_size`` pages are
+        full and content-complete.  No-op on dense engines or with the
+        prefix cache off.
+        """
+        if not self.prefix_cache or self.pager is None \
+                or slot not in self.pager.assigned:
+            return 0
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        full = min(max(tokens.size - 1, 0) // self.page_size,
+                   len(self.pager.assigned[slot]))
+        if not full:
+            return 0
+        return self.pager.publish(tokens[:full * self.page_size],
+                                  self.pager.assigned[slot][:full])
+
+    def preempt_slot(self, slot: int, tokens) -> int:
+        """Pause a live slot: publish its full committed pages (so a later
+        re-admission splices them back via the regular prefix match) and
+        release the slot's pages/claim.  Returns the pages published.
+
+        Publication must precede release — ``publish`` requires the
+        caller to hold a reference to every published page.  The caller
+        owns the rest of the lifecycle: force-done the row, free the
+        scheduler slot and requeue ``tokens`` as the resume prompt.
+        """
+        published = self.publish_prefix(slot, tokens)
+        self.release_slot(slot)
+        return published
 
     def run(self, prompts: np.ndarray, rng, *,
             collect_stats: bool = True):

@@ -86,7 +86,7 @@ class Replica:
         fleet-loop thread with "deque mutated during iteration".
         """
         with self.cv:
-            times = [a for (_, _, _, a) in self.inbox]
+            times = [item[3] for item in self.inbox]
         if self.scheduler.queue:
             times.append(float(self.scheduler.queue[0].arrival_time))
         return min(times) if times else None
@@ -94,13 +94,16 @@ class Replica:
     # -- submission (any thread) ---------------------------------------
     def submit(self, prompt, *, request_id: str,
                max_steps: Optional[int] = None,
-               arrival_time: float = 0.0) -> str:
+               arrival_time: float = 0.0, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               stream=None) -> str:
         """Enqueue a routed request on this replica's inbox (thread-safe)
         and wake the replica's fleet-loop thread if it is idle."""
         with self.cv:
             self.routed += 1
             self.inbox.append((prompt, request_id, max_steps,
-                               float(arrival_time)))
+                               float(arrival_time), int(priority),
+                               deadline_s, stream))
             self.cv.notify_all()
         return request_id
 
@@ -113,10 +116,13 @@ class Replica:
             with self.cv:
                 if not self.inbox:
                     return moved
-                prompt, rid, max_steps, arrival = self.inbox.popleft()
+                (prompt, rid, max_steps, arrival, priority, deadline_s,
+                 stream) = self.inbox.popleft()
             self.scheduler.submit(prompt, request_id=rid,
                                   max_steps=max_steps,
-                                  arrival_time=arrival)
+                                  arrival_time=arrival,
+                                  priority=priority,
+                                  deadline_s=deadline_s, stream=stream)
             moved += 1
 
     def seed_rng(self, fleet_key) -> None:
@@ -147,8 +153,8 @@ class Replica:
 
 def build_replicas(engines, *, capacity: int, continuous: bool = True,
                    prompt_pad_len: int = 0, collect_stats: bool = False,
-                   cache_aware: bool = True,
-                   sync: bool = True) -> List[Replica]:
+                   cache_aware: bool = True, sync: bool = True,
+                   chunk_tokens: int = 0) -> List[Replica]:
     """Wrap N independent engines into router-ready replicas.
 
     Each engine must be a distinct object: a paged engine backs one live
@@ -157,7 +163,9 @@ def build_replicas(engines, *, capacity: int, continuous: bool = True,
     ``len(engines) * capacity`` slots in total.  ``cache_aware`` turns on
     cache-aware admission ordering inside each replica (queued requests
     with live radix matches admit first); ``sync=False`` gives every
-    replica the pipelined scheduler (one step ticket in flight).
+    replica the pipelined scheduler (one step ticket in flight);
+    ``chunk_tokens`` sets every replica's per-step prefill budget
+    (chunked prefill, 0 = unmetered).
     """
     engines = list(engines)
     if len(set(map(id, engines))) != len(engines):
@@ -171,6 +179,6 @@ def build_replicas(engines, *, capacity: int, continuous: bool = True,
                                 prompt_pad_len=prompt_pad_len,
                                 collect_stats=collect_stats,
                                 cache_aware=cache_aware,
-                                sync=sync))
+                                sync=sync, chunk_tokens=chunk_tokens))
         for i, eng in enumerate(engines)
     ]

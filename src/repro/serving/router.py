@@ -133,7 +133,8 @@ class ReplicaRouter:
                  hash_tier: str = "mod",
                  continuous: bool = True, prompt_pad_len: int = 0,
                  collect_stats: bool = False, cache_aware: bool = True,
-                 sync: bool = True, threaded: bool = True):
+                 sync: bool = True, threaded: bool = True,
+                 chunk_tokens: int = 0):
         """Build one replica (engine + scheduler) per engine given."""
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
@@ -144,7 +145,8 @@ class ReplicaRouter:
         self.replicas: List[Replica] = build_replicas(
             engines, capacity=capacity, continuous=continuous,
             prompt_pad_len=prompt_pad_len, collect_stats=collect_stats,
-            cache_aware=cache_aware, sync=sync)
+            cache_aware=cache_aware, sync=sync,
+            chunk_tokens=chunk_tokens)
         self.policy = policy
         self.skew = skew
         self.hash_tier = hash_tier
@@ -243,13 +245,16 @@ class ReplicaRouter:
     # ------------------------------------------------------------------
     def submit(self, prompt, *, request_id: Optional[str] = None,
                max_steps: Optional[int] = None,
-               arrival_time: float = 0.0) -> str:
+               arrival_time: float = 0.0, priority: int = 0,
+               deadline_s: Optional[float] = None, stream=None) -> str:
         """Route a prompt to a replica queue; returns the request id.
 
         Ids are unique fleet-wide (router-assigned ``req-N`` by default;
         caller-provided ids are checked against every replica).  The
         hand-off goes through the replica's thread-safe inbox, so
         submitting while a threaded ``run`` is draining is safe.
+        ``priority``/``deadline_s``/``stream`` pass straight through to
+        the replica scheduler (see ``GSIScheduler.submit``).
         """
         if request_id is None:
             # skip ids a caller already used explicitly — a collision
@@ -264,7 +269,9 @@ class ReplicaRouter:
         idx = self.route(prompt)
         self.replicas[idx].submit(prompt, request_id=request_id,
                                   max_steps=max_steps,
-                                  arrival_time=arrival_time)
+                                  arrival_time=arrival_time,
+                                  priority=priority,
+                                  deadline_s=deadline_s, stream=stream)
         self._replica_of[request_id] = idx
         with self._fleet_cv:
             self._fleet_cv.notify_all()   # wake a sequential idle wait

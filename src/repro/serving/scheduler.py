@@ -35,6 +35,31 @@ reacquired before its final tokens are harvested, and admission then sees
 exactly the free-slot/free-page view the synchronous scheduler would —
 which is what makes async == sync tokens bit-identical (same engine
 steps, same slots, same rng keys) at any temperature.
+
+Three SLO-facing mechanisms ride on top (``docs/SERVING.md`` "Traffic
+shaping & SLOs"):
+
+* **chunked prefill** (``chunk_tokens > 0``) — prompt prefill is metered
+  to at most ``chunk_tokens`` tokens per engine step, shared between new
+  admissions and mid-prefill continuations.  A long prompt is admitted
+  truncated (its slot stays device-done, inert under the decode masks)
+  and grows by one chunk per step via the engine's ``extend`` commit, so
+  in-flight requests keep decoding instead of stalling behind one giant
+  prefill.  At temperature 0 the committed context — hence the decoded
+  tokens — is identical chunked or not.
+* **priority preemption** — requests carry ``priority`` (larger = more
+  urgent) and optional ``deadline_s``.  When a higher-priority arrival
+  cannot be admitted, the lowest-priority live slot is *paused*: its
+  full committed pages are published into the radix cache, the slot and
+  pages are released, and the request re-queues with prompt + generated
+  tokens as its resume context (spliced straight back from the cache on
+  re-admission).  Preempt == pause, never drop; page conservation
+  ``free + referenced + cached == num_pages`` holds across every
+  preempt/resume.
+* **token streaming** — ``submit(..., stream=cb)`` delivers a
+  :class:`StreamEvent` per harvested step (and a final event) in
+  materialize order, giving per-request TTFT and inter-token latency;
+  :class:`TokenStream` adapts the callback to a blocking iterator.
 """
 from __future__ import annotations
 
@@ -61,6 +86,8 @@ class Request:
     max_steps: int                # per-request reasoning-step budget
     arrival_time: float = 0.0     # seconds after scheduler start
     submitted_at: float = 0.0     # wall clock (perf_counter) at submit
+    priority: int = 0             # larger = more urgent (0 = default class)
+    deadline_s: Optional[float] = None   # SLO: finish within s of arrival
 
 
 @dataclass
@@ -74,6 +101,10 @@ class Response:
     admitted_at: float = 0.0      # seconds since scheduler start
     finished_at: float = 0.0
     arrival_time: float = 0.0
+    priority: int = 0
+    deadline_s: Optional[float] = None
+    first_token_at: Optional[float] = None  # scheduler clock, first token
+    preemptions: int = 0          # times this request was paused/resumed
 
     @property
     def tokens(self) -> np.ndarray:
@@ -91,6 +122,84 @@ class Response:
     def latency(self) -> float:
         """Queueing + decode latency, seconds since the request arrived."""
         return self.finished_at - self.arrival_time
+
+    @property
+    def ttft(self) -> float:
+        """Time to first committed token since arrival (NaN if none)."""
+        if self.first_token_at is None:
+            return float("nan")
+        return self.first_token_at - self.arrival_time
+
+    @property
+    def tpot(self) -> float:
+        """Mean inter-token latency after the first token (time per
+        output token; NaN with fewer than two tokens)."""
+        n = self.num_tokens
+        if self.first_token_at is None or n < 2:
+            return float("nan")
+        return (self.finished_at - self.first_token_at) / (n - 1)
+
+    @property
+    def deadline_missed(self) -> bool:
+        """True iff a deadline was set and the total latency blew it."""
+        return self.deadline_s is not None and self.latency > self.deadline_s
+
+
+@dataclass
+class StreamEvent:
+    """One incremental streaming update for a request.
+
+    Per-step events carry the step's non-PAD tokens in materialize order;
+    the final event (``final=True``, possibly zero tokens) carries the
+    finish reason.  ``t`` is the scheduler clock (seconds since start),
+    so ``t`` of the first event minus the request's arrival time is its
+    observed TTFT and gaps between events are inter-token latencies.
+    """
+
+    request_id: str
+    tokens: np.ndarray
+    step: int                     # engine steps the request has consumed
+    final: bool = False
+    finish_reason: str = ""
+    t: float = 0.0
+
+
+class TokenStream:
+    """Thread-safe stream consumer: a callback that is also an iterator.
+
+    Pass an instance as ``submit(..., stream=...)`` and iterate it from
+    any thread: iteration yields :class:`StreamEvent` objects as the
+    scheduler harvests them and ends after the final event.  Useful with
+    the threaded router fleet, where the callback fires on a replica
+    thread while the consumer iterates on the caller's.
+    """
+
+    def __init__(self):
+        """Create an empty, open stream."""
+        self._events: deque = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def __call__(self, event: StreamEvent) -> None:
+        """Producer side: enqueue one event (scheduler harvest thread)."""
+        with self._cv:
+            self._events.append(event)
+            if event.final:
+                self._closed = True
+            self._cv.notify_all()
+
+    def __iter__(self):
+        """Consumer side: block for events until the final one arrives."""
+        while True:
+            with self._cv:
+                while not self._events and not self._closed:
+                    self._cv.wait()
+                if not self._events:
+                    return
+                event = self._events.popleft()
+            yield event
+            if event.final:
+                return
 
 
 @dataclass
@@ -121,6 +230,20 @@ class _RetiredStep:
     res: StepResult
     bound: Dict[int, Response]
     finished: List[Tuple[int, Response, str, float]]
+
+
+@dataclass
+class _Prefill:
+    """A slot mid chunked-prefill: how much of the prompt is committed.
+
+    ``committed`` counts prompt tokens the engine holds for the slot
+    (including the pending one), prefix-cache match included; the next
+    chunk is ``req.prompt[committed : committed + chunk]``.  The slot is
+    claimed and device-done until its final chunk commits.
+    """
+
+    req: Request
+    committed: int
 
 
 class GSIScheduler:
@@ -154,15 +277,24 @@ class GSIScheduler:
                  *finalized* this call, which lag the decode by one
                  step until the pipeline drains).  Token streams are
                  bit-identical either way.
+    chunk_tokens: per-engine-step prefill token budget (0 = off: whole
+                 prompts prefill in one admit).  When set, admissions and
+                 mid-prefill continuations share at most ``chunk_tokens``
+                 committed prompt tokens per step, interleaved with the
+                 live slots' decode — a long prompt no longer stalls
+                 in-flight requests.  Greedy (temperature-0) outputs are
+                 identical with chunking on or off.
     """
 
     def __init__(self, engine: GSIServingEngine, *, capacity: int,
                  continuous: bool = True, prompt_pad_len: int = 0,
                  collect_stats: bool = False, cache_aware: bool = False,
-                 sync: bool = True):
+                 sync: bool = True, chunk_tokens: int = 0):
         """Build a scheduler over ``engine`` with ``capacity`` slots."""
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if chunk_tokens < 0:
+            raise ValueError("chunk_tokens must be >= 0")
         self.engine = engine
         self.capacity = capacity
         self.continuous = continuous
@@ -181,6 +313,13 @@ class GSIScheduler:
         self._pad = int(prompt_pad_len)
         self._seq = 0
         self._t0: Optional[float] = None
+        # SLO machinery: chunked prefill, priority preemption, streaming
+        self._chunk = int(chunk_tokens)
+        self._prefill: Dict[int, _Prefill] = {}      # slot -> mid-prefill
+        self._live_req: Dict[int, Request] = {}      # slot -> its request
+        self._paused: Dict[str, Response] = {}       # preempted, unfinished
+        self._streams: Dict[str, object] = {}        # id -> stream callback
+        self._ids: set = set()                       # every id ever submitted
         # cache-aware ordering may prefer hits over the queue head, but
         # never more than this many consecutive admissions (bounded
         # head-of-line starvation; FIFO order bounds everyone behind it)
@@ -218,6 +357,11 @@ class GSIScheduler:
         self._steps_taken[:] = 0
         self._budget[:] = 0
         self._t0 = None
+        self._prefill = {}
+        self._live_req = {}
+        self._paused = {}
+        self._streams = {}
+        self._ids = set()
         self._head_bypassed = 0
         self._inflight = None
         self._retired = None
@@ -231,8 +375,24 @@ class GSIScheduler:
     # ------------------------------------------------------------------
     def submit(self, prompt, *, request_id: Optional[str] = None,
                max_steps: Optional[int] = None,
-               arrival_time: float = 0.0) -> str:
-        """Queue a prompt; returns the request id."""
+               arrival_time: float = 0.0, priority: int = 0,
+               deadline_s: Optional[float] = None,
+               stream=None) -> str:
+        """Queue a prompt; returns the request id.
+
+        ``priority`` (larger = more urgent) orders admission across
+        classes and arms preemption: a deferring higher-priority request
+        pauses the lowest-priority live slot.  ``deadline_s`` is the SLO
+        latency target (arrival to finish) — purely accounting, see
+        ``Response.deadline_missed``.  ``stream`` is an optional callable
+        (e.g. a :class:`TokenStream`) receiving one :class:`StreamEvent`
+        per harvested step plus a final event.
+
+        Request ids are unique for the scheduler's lifetime: reusing an
+        id — even one whose first request already finished — raises
+        (``self.responses`` is id-keyed; a silent overwrite would corrupt
+        the earlier response's ledger entry).
+        """
         g = self.engine.gcfg
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
@@ -254,12 +414,22 @@ class GSIScheduler:
                     f"only has {self.engine.num_pages}; it could never "
                     f"be admitted")
         if request_id is None:
+            while f"req-{self._seq}" in self._ids:
+                self._seq += 1
             request_id = f"req-{self._seq}"
+        elif request_id in self._ids:
+            raise ValueError(
+                f"duplicate request id {request_id!r}: ids must be unique "
+                f"for the scheduler's lifetime (responses are keyed by id)")
+        self._ids.add(request_id)
+        if stream is not None:
+            self._streams[request_id] = stream
         self._seq += 1
         self.queue.append(Request(
             id=request_id, prompt=prompt, max_steps=budget,
             arrival_time=float(arrival_time),
-            submitted_at=time.perf_counter()))
+            submitted_at=time.perf_counter(),
+            priority=int(priority), deadline_s=deadline_s))
         if len(self.queue) > 1 and \
                 arrival_time < self.queue[-2].arrival_time:
             # keep the queue arrival-ordered (stable for equal arrivals) so
@@ -286,58 +456,91 @@ class GSIScheduler:
         is computed here once and reused by the admission path, so each
         candidate costs exactly one host-side trie walk.
 
-        FIFO by default.  With ``cache_aware=True``, the *arrived*
-        request with the longest live radix prefix match wins (cache-
-        aware admission ordering: a hit admitted now skips prefill and
-        pins its matched pages before anything can evict them); arrival
-        order breaks ties, so equal-match requests still admit FIFO.
-        The head request is never bypassed more than ``_bypass_limit``
-        consecutive admissions — a bounded-starvation guarantee that
-        holds even against an endless stream of fresher cache hits.
+        Selection is two-level.  First the highest *priority* among
+        arrived requests wins outright — priority deliberately overrides
+        both FIFO order and the bypass bound (that is what priority
+        classes mean; the starvation guarantee below holds *within* a
+        class).  Within the winning class: FIFO by default; with
+        ``cache_aware=True`` the request with the longest live radix
+        prefix match wins (a hit admitted now skips prefill and pins its
+        matched pages before anything can evict them), arrival order
+        breaking ties.  The class's FIFO-first request is never bypassed
+        more than ``_bypass_limit`` consecutive admissions — a
+        bounded-starvation guarantee that holds even against an endless
+        stream of fresher cache hits.
         """
-        head = self.queue[0]
-        if not self.cache_aware or len(self.queue) <= 1 \
-                or self._head_bypassed >= self._bypass_limit:
-            return (0,) + self.engine.match_prefix(head.prompt)
-        best = None
+        # the arrived highest-priority class, FIFO-ordered (the queue is
+        # arrival-ordered, so stop at the first future arrival)
+        tier: List[int] = []
+        top = None
         for i, req in enumerate(self.queue):
             if req.arrival_time > now:
-                break                  # queue is arrival-ordered
-            shared, hit = self.engine.match_prefix(req.prompt)
+                break
+            if top is None or req.priority > top:
+                top, tier = req.priority, [i]
+            elif req.priority == top:
+                tier.append(i)
+        if not tier:
+            tier = [0]                 # caller guarantees _ready(now)
+        lead = tier[0]
+        if not self.cache_aware or len(tier) == 1 \
+                or self._head_bypassed >= self._bypass_limit:
+            return (lead,) + self.engine.match_prefix(
+                self.queue[lead].prompt)
+        best = None
+        for i in tier:
+            shared, hit = self.engine.match_prefix(self.queue[i].prompt)
             if best is None or hit > best[2]:
                 best = (i, shared, hit)
         return best
 
     def _admit_ready(self, now: float) -> List[str]:
-        """Move arrived requests from the queue into free slots.
+        """Advance mid-prefill slots, then move arrived requests from the
+        queue into free slots.
 
         Each admission first consults the engine's radix prefix cache: the
         longest cached page-aligned prefix of the prompt is spliced into
         the slot's block table and only the tail is prefilled.  Paged
         engines additionally gate on free pages — counting LRU-evictable
         cached pages, so admission prefers evicting cold prefix pages over
-        deferring.  If the head request's tail claim still doesn't fit,
-        admission stops (the request stays queued — back-pressure, never
-        dropped) and retries on a later step once finished requests have
-        returned pages.
+        deferring.  A request that still doesn't fit may *preempt* a
+        strictly-lower-priority live slot (pause + page publication, see
+        ``_preempt``); otherwise admission stops (the request stays
+        queued — back-pressure, never dropped) and retries on a later
+        step once finished requests have returned pages.
+
+        With ``chunk_tokens`` set, continuations and new admissions share
+        one per-step prefill token budget: a prompt whose tail exceeds
+        what is left admits *truncated* (its slot inert until ``extend``
+        commits the rest, one chunk per step).
         """
+        budget = self._chunk if self._chunk else None
+        budget = self._advance_prefill(now, budget)
         if not self.continuous and self.pool.num_live > 0:
             return []
-        free = self.pool.free_slots()
-        batch: Dict[int, Request] = {}
+        batch: Dict[int, Tuple[Request, np.ndarray]] = {}
         starts = np.zeros((self.capacity,), np.int32)
-        while free and self._ready(now):
+        live = np.ones((self.capacity,), bool)
+        committed_total = 0
+        while self._ready(now):
+            if budget is not None and budget <= 0:
+                break                  # this step's prefill budget is spent
+            free = [s for s in self.pool.free_slots() if s not in batch]
             pick, shared, hit_tok = self._pick_ready(now)
             req = self.queue[pick]
-            if not self.engine.admit_ok(req.prompt.size, req.max_steps,
-                                        shared=shared):
-                break                      # out of pages: defer, keep order
-            if pick:
+            if not free or not self.engine.admit_ok(
+                    req.prompt.size, req.max_steps, shared=shared):
+                # a deferring higher-priority request may pause a live
+                # lower-priority slot instead of waiting behind it
+                if self._try_preempt(req, now):
+                    continue           # re-pick: slot/pages freed, cache grew
+                break                  # true back-pressure: defer, keep order
+            if pick and req.priority == self.queue[0].priority:
                 self._head_bypassed += 1
-            else:
+            elif not pick:
                 self._head_bypassed = 0
             del self.queue[pick]
-            slot = free.pop(0)
+            slot = free[0]
             if self._inflight is not None and \
                     slot in self._inflight.bound:
                 # deferred-release invariant: a slot bound by a ticket
@@ -348,35 +551,193 @@ class GSIScheduler:
                     f"flight (deferred-release invariant violated)")
             self.engine.claim_slot(slot, req.prompt.size, req.max_steps,
                                    shared=shared)
-            batch[slot] = req
+            tail = req.prompt.size - hit_tok
+            take = tail if budget is None else min(tail, budget)
+            committed = hit_tok + take
+            if committed < req.prompt.size:
+                # chunked admission: only prompt[:committed] prefills now
+                live[slot] = False
+                self._prefill[slot] = _Prefill(req=req, committed=committed)
+            if budget is not None:
+                budget -= take
+            committed_total += take
+            batch[slot] = (req, req.prompt[:committed])
             starts[slot] = hit_tok
             self.stats.bump(
                 prefix_queries=1, prefix_hits=int(bool(hit_tok)),
                 prefix_hit_tokens=int(hit_tok),
                 prefix_pages_reused=len(shared),
-                prefill_tokens=max(req.prompt.size - 1 - hit_tok, 0))
+                prefill_tokens=max(tail - 1, 0))
         if not batch:
             return []
-        longest = max(r.prompt.size for r in batch.values())
+        longest = max(p.size for _, p in batch.values())
         if longest > self._pad:
             # round up so prompt-length jitter doesn't retrace _jit_admit
             self._pad = -(-longest // 8) * 8
-        packed = pack_prompts({s: r.prompt for s, r in batch.items()},
+        packed = pack_prompts({s: p for s, (_, p) in batch.items()},
                               self.capacity, self._pad)
         mask = np.zeros((self.capacity,), bool)
-        for slot, req in batch.items():
+        for slot, (req, _) in batch.items():
             mask[slot] = True
             self.pool.claim(slot, req.id)
+            self._live_req[slot] = req
             self._steps_taken[slot] = 0
             self._budget[slot] = req.max_steps
-            self._partial[slot] = Response(
-                request_id=req.id, admitted_at=now,
-                arrival_time=req.arrival_time)
-        self.state = self.engine.admit(self.state, mask, packed, starts)
+            resp = self._paused.pop(req.id, None)
+            if resp is not None:
+                self.stats.bump(resumes=1)   # resumed after a preemption
+            else:
+                resp = Response(
+                    request_id=req.id, admitted_at=now,
+                    arrival_time=req.arrival_time,
+                    priority=req.priority, deadline_s=req.deadline_s)
+            self._partial[slot] = resp
+        self.state = self.engine.admit(self.state, mask, packed, starts,
+                                       live=live)
+        self.stats.prefill_commit_max = max(
+            self.stats.prefill_commit_max, committed_total)
         pager = getattr(self.engine, "pager", None)
         if pager is not None:
             self.stats.pages_evicted = pager.evicted
-        return [r.id for r in batch.values()]
+        return [req.id for req, _ in batch.values()]
+
+    def _advance_prefill(self, now: float,
+                         budget: Optional[int]) -> Optional[int]:
+        """Commit the next chunk of every mid-prefill slot, spending from
+        this step's prefill token ``budget``; returns what is left for
+        new admissions.
+
+        Slots advance in slot order.  A slot whose final chunk commits
+        comes up live (it decodes from the next engine step — exactly
+        the state a one-shot admit would have left it in) and its
+        prompt's full pages are published to the radix index.
+        """
+        if not self._prefill:
+            return budget
+        mask = np.zeros((self.capacity,), bool)
+        live = np.zeros((self.capacity,), bool)
+        chunks: Dict[int, np.ndarray] = {}
+        total = 0
+        for slot in sorted(self._prefill):
+            if budget is not None and budget <= 0:
+                break
+            pf = self._prefill[slot]
+            remaining = pf.req.prompt.size - pf.committed
+            take = remaining if budget is None else min(remaining, budget)
+            chunks[slot] = pf.req.prompt[pf.committed:pf.committed + take]
+            mask[slot] = True
+            pf.committed += take
+            total += take
+            if budget is not None:
+                budget -= take
+            if pf.committed == pf.req.prompt.size:
+                live[slot] = True
+        if not chunks:
+            return budget
+        width = max(c.size for c in chunks.values())
+        if self._chunk:
+            # fixed width (the chunk budget, rounded up) keeps
+            # _jit_extend from retracing on chunk-length jitter
+            width = max(width, self._chunk)
+        width = -(-width // 8) * 8
+        packed = np.full((self.capacity, width), PAD, np.int32)
+        for slot, c in chunks.items():
+            packed[slot, :c.size] = c
+        self.state = self.engine.extend(self.state, mask, packed, live)
+        self.stats.prefill_commit_max = max(
+            self.stats.prefill_commit_max, total)
+        for slot in np.nonzero(live)[0]:
+            pf = self._prefill.pop(int(slot))
+            self.engine.publish_prefix(int(slot), pf.req.prompt)
+        return budget
+
+    # ------------------------------------------------------------------
+    # Priority preemption
+    # ------------------------------------------------------------------
+    def _try_preempt(self, req: Request, now: float) -> bool:
+        """Pause the lowest-priority live slot strictly below
+        ``req.priority`` so ``req`` can admit; False if no such victim.
+
+        Victim order: lowest priority first, then fewest decode steps
+        taken (least progress to replay on engines without a prefix
+        cache), then lowest slot.  Mid-prefill slots are not preemptible:
+        their request has produced nothing and holds no published pages —
+        pausing one would only reshuffle the prefill budget.
+        """
+        victim = None
+        for slot in self.pool.live_slots():
+            if slot in self._prefill:
+                continue
+            vreq = self._live_req[slot]
+            if vreq.priority >= req.priority:
+                continue
+            key = (vreq.priority, int(self._steps_taken[slot]), slot)
+            if victim is None or key < victim:
+                victim = key
+        if victim is None:
+            return False
+        self._preempt(victim[2], now)
+        return True
+
+    def _preempt(self, slot: int, now: float) -> None:
+        """Pause the live request in ``slot``: publish its committed
+        pages, release the slot and its pages, requeue it for resume.
+
+        The request's committed context (prompt + every harvested step)
+        becomes the resume prompt; with a radix cache its full pages were
+        just published, so re-admission splices them straight back and
+        re-prefills at most one page worth of tail.  The partial
+        :class:`Response` parks in ``_paused`` and keeps accumulating on
+        resume — preempt is a pause, never a drop, and page conservation
+        (``free + referenced + cached == num_pages``) holds throughout.
+        """
+        req = self._live_req.pop(slot)
+        resp = self._partial.pop(slot)
+        # async: the victim's latest step may still await its deferred
+        # harvest — fold those tokens in before building the context
+        if self._retired is not None and slot in self._retired.bound:
+            res = self._retired.res
+            self._retired.bound.pop(slot)
+            if not res.done_prev[slot]:
+                toks = res.chosen[slot]
+                self._emit_step(resp, toks[toks != PAD], now)
+        context = np.concatenate(
+            [req.prompt.astype(np.int32), resp.tokens])
+        mask = np.zeros((self.capacity,), bool)
+        mask[slot] = True
+        self.state = self.engine.force_done(self.state, mask)
+        self.engine.preempt_slot(slot, context)
+        self.pool.release(slot)
+        remaining = int(self._budget[slot] - self._steps_taken[slot])
+        resp.preemptions += 1
+        self.stats.bump(preemptions=1)
+        self._paused[req.id] = resp
+        resumed = Request(
+            id=req.id, prompt=context, max_steps=remaining,
+            arrival_time=req.arrival_time, submitted_at=req.submitted_at,
+            priority=req.priority, deadline_s=req.deadline_s)
+        self.queue.appendleft(resumed)
+        if len(self.queue) > 1 and \
+                self.queue[1].arrival_time < resumed.arrival_time:
+            self.queue = deque(sorted(self.queue,
+                                      key=lambda r: r.arrival_time))
+
+    def preempt(self, request_id: str) -> bool:
+        """Manually pause a live request (the mechanism priority
+        admission uses).  Returns False when the request is not in a
+        preemptible state: unknown / queued / mid-prefill / finished.
+
+        Drains the async pipeline first so the request's final harvested
+        state is known — the drain may even *finish* it (EOS already in
+        flight), in which case there is nothing left to preempt.
+        """
+        if self._inflight is not None or self._retired is not None:
+            self.flush()
+        slot = self.pool.slot_of(request_id)
+        if slot is None or slot in self._prefill:
+            return False
+        self._preempt(slot, self._now())
+        return True
 
     def prefix_stats(self) -> Dict[str, float]:
         """Prefix-cache admission counters.
@@ -436,10 +797,11 @@ class GSIScheduler:
         finished: List[Response] = []
         force_done = np.zeros((self.capacity,), bool)
         for slot in self.pool.live_slots():
+            if res.done_prev[slot]:
+                continue               # mid-prefill rows are device-inert
             resp = self._partial[slot]
             toks = res.chosen[slot]
-            resp.steps.append(toks[toks != PAD])
-            resp.engine_steps += 1
+            self._emit_step(resp, toks[toks != PAD], self._now())
             self._steps_taken[slot] += 1
             reason = ""
             if res.eos[slot]:
@@ -450,16 +812,43 @@ class GSIScheduler:
                 reason = "max_steps"
                 force_done[slot] = True
             if reason:
-                resp.finish_reason = reason
-                resp.finished_at = self._now()
                 self.pool.release(slot)
                 self.engine.release_slot(slot)
                 del self._partial[slot]
-                self.responses[resp.request_id] = resp
-                self.stats.bump(requests_finished=1)
+                self._live_req.pop(slot, None)
+                self._finalize(resp, reason, self._now())
                 finished.append(resp)
         self.state = self.engine.force_done(self.state, force_done)
         return finished
+
+    def _emit_step(self, resp: Response, toks: np.ndarray,
+                   now: float) -> None:
+        """Append one harvested step's tokens to ``resp`` and fire its
+        stream callback (streams observe materialize order)."""
+        resp.steps.append(toks)
+        resp.engine_steps += 1
+        if toks.size and resp.first_token_at is None:
+            resp.first_token_at = now
+        cb = self._streams.get(resp.request_id)
+        if cb is not None and toks.size:
+            cb(StreamEvent(request_id=resp.request_id, tokens=toks,
+                           step=resp.engine_steps, t=now))
+
+    def _finalize(self, resp: Response, reason: str, at: float) -> None:
+        """Stamp a finished response, account its SLO and close its
+        stream (one final event carrying the finish reason)."""
+        resp.finish_reason = reason
+        resp.finished_at = at
+        self.responses[resp.request_id] = resp
+        self.stats.bump(requests_finished=1)
+        if resp.deadline_missed:
+            self.stats.bump(deadline_misses=1)
+        cb = self._streams.pop(resp.request_id, None)
+        if cb is not None:
+            cb(StreamEvent(request_id=resp.request_id,
+                           tokens=np.zeros((0,), np.int32),
+                           step=resp.engine_steps, final=True,
+                           finish_reason=reason, t=at))
 
     # ------------------------------------------------------------------
     # Async pipeline (sync=False)
@@ -538,6 +927,7 @@ class GSIScheduler:
                 self.pool.release(slot)
                 self.engine.release_slot(slot)
                 del self._partial[slot]
+                self._live_req.pop(slot, None)
                 finished.append((slot, resp, reason, now))
         self.state = self.engine.force_done(self.state, force_done)
         self._retired = _RetiredStep(res=res, bound=pend.bound,
@@ -552,18 +942,18 @@ class GSIScheduler:
         before any of these slots could have been reused.
         """
         res = retired.res
+        now = self._now()
         for slot, resp in retired.bound.items():
             if res.done_prev[slot]:
                 continue
             toks = res.chosen[slot]
-            resp.steps.append(toks[toks != PAD])
-            resp.engine_steps += 1
+            self._emit_step(resp, toks[toks != PAD], now)
         done_now: List[Response] = []
         for slot, resp, reason, at in retired.finished:
-            resp.finish_reason = reason
-            resp.finished_at = at
-            self.responses[resp.request_id] = resp
-            self.stats.bump(requests_finished=1)
+            # finalize at harvest time, not retire time: the finish is
+            # client-visible only once its tokens are (keeps
+            # finished_at >= first_token_at, so TPOT is never negative)
+            self._finalize(resp, reason, now)
             done_now.append(resp)
         self.engine.fold_step_stats(res, self.stats, self.collect_stats)
         return done_now

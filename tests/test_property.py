@@ -307,15 +307,17 @@ def _async_sched():
 @settings(deadline=None, max_examples=8)
 @given(data=st.data())
 def test_async_pipeline_page_conservation_under_interleaving(data):
-    """Interleaving submit / step / flush on the pipelined scheduler
-    preserves the page ledger conservation law after every operation,
-    never reacquires a slot bound by an in-flight ticket (the scheduler
-    raises if it would), and drains to a complete response set."""
+    """Interleaving submit / step / flush / preempt on the pipelined
+    scheduler preserves the page ledger conservation law after every
+    operation, never reacquires a slot bound by an in-flight ticket
+    (the scheduler raises if it would), never drops a paused request,
+    and drains to a complete response set."""
     sched = _async_sched()
     pool = sched.engine.pager
     rng = [jax.random.PRNGKey(data.draw(st.integers(0, 2**31 - 1),
                                         label="seed"))]
     submitted = [0]
+    preempted = [0]
 
     def check():
         assert pool.num_free + pool.num_referenced + pool.num_cached \
@@ -339,15 +341,30 @@ def test_async_pipeline_page_conservation_under_interleaving(data):
     def op_flush():
         sched.flush()
 
-    ops = {"submit": op_submit, "step": op_step, "flush": op_flush}
+    def op_preempt():
+        # blind pause of a random submitted id: preempt() returns False
+        # for ids that are unknown / queued / finished — the ledger must
+        # conserve either way, and a paused request may never be dropped
+        if not submitted[0]:
+            return
+        which = data.draw(st.integers(0, submitted[0] - 1),
+                          label="preempt_id")
+        if sched.preempt(f"p{which}"):
+            preempted[0] += 1
+
+    ops = {"submit": op_submit, "step": op_step, "flush": op_flush,
+           "preempt": op_preempt}
     for _ in range(data.draw(st.integers(1, 12), label="steps")):
         ops[data.draw(st.sampled_from(sorted(ops)), label="op")]()
         check()
-    # bounded drain: every submitted request must complete
-    for _ in range(8 * submitted[0] + 4):
+    # bounded drain: every submitted request must complete (each pause
+    # costs at most one extra admission step)
+    for _ in range(8 * submitted[0] + 2 * preempted[0] + 4):
         if not (sched.queue or sched.pool.num_live or sched.has_pending):
             break
         op_step()
         check()
     assert len(sched.responses) == submitted[0]
     assert sched.pool.num_free == sched.capacity
+    assert sched.stats.preemptions == preempted[0]
+    assert sched.stats.resumes == preempted[0]

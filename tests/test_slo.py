@@ -1,0 +1,356 @@
+"""SLO-aware serving: chunked prefill, preemption, deadlines, streaming.
+
+Layers of coverage:
+  * Chunked-prefill identity: admitting a long prompt over several
+    engine steps (per-step prefill token budget) commits exactly the
+    same greedy tokens as one-shot admission, across dense and
+    paged+prefix engines, sync and async pipelines, and across
+    full / sliding-window / hybrid-recurrent stacks — while the
+    per-step commit bound (``prefill_commit_max``) provably shrinks.
+  * Preempt/resume round trip: a paused request resumes through a
+    radix splice and finishes with tokens identical to an un-preempted
+    greedy run; the page ledger conserves through the pause.
+  * Priority admission: a deferring higher-priority request preempts
+    the lowest-priority live slot (pause, never drop).
+  * Deadline accounting: ``deadline_s`` is pure accounting — misses
+    are counted, nothing is cancelled.
+  * Streaming: per-request callbacks observe materialize order, carry
+    monotone step indices, reassemble to the response tokens exactly,
+    and end with a final event carrying the finish reason.
+  * Duplicate request ids are rejected for the scheduler's lifetime
+    (regression: ids were silently reusable once the first copy
+    finished, corrupting the responses map).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig, ModelConfig
+from repro.models import build_model
+from repro.serving import GSIScheduler, GSIServingEngine, TokenStream
+
+PAD = 0
+
+PRE_A = np.asarray([5 + (i % 24) for i in range(17)], np.int32)
+PRE_B = np.asarray([30 + (i % 20) for i in range(17)], np.int32)
+
+
+def _prompt(pre, tail):
+    return np.concatenate([pre, np.asarray(tail, np.int32)])
+
+
+def _triple(draft):
+    target = dataclasses.replace(draft, name=draft.name + "-t",
+                                 num_layers=3)
+    prm = dataclasses.replace(target, name=draft.name + "-p",
+                              reward_head=True)
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+@pytest.fixture(scope="module")
+def triple(tiny_triple):
+    draft, target, prm = tiny_triple
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+@pytest.fixture(scope="module")
+def greedy():
+    # temperature 0: per-row trajectories depend only on the committed
+    # context, so any scheduling of the same prompts must reproduce the
+    # same tokens bit-for-bit
+    return GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                     min_step_reward=-1.0, temperature=0.0)
+
+
+@pytest.fixture(scope="module")
+def nostop(greedy):
+    # no EOS / reward early-exit: preemption tests need the victim to
+    # keep decoding until its step budget, not finish under the test
+    return dataclasses.replace(greedy, eos_token_id=-1,
+                               min_step_reward=-1e9)
+
+
+def _engine(triple, g, **kw):
+    cfgs, params = triple
+    return GSIServingEngine(*cfgs, *params, g, max_seq=96, **kw)
+
+
+def _serve(engine, prompts, budgets, *, sync=True, capacity=2, seed=42,
+           chunk_tokens=0, cache_aware=False):
+    sched = GSIScheduler(engine, capacity=capacity, sync=sync,
+                         cache_aware=cache_aware, chunk_tokens=chunk_tokens)
+    ids = [sched.submit(p, request_id=f"r{i}", max_steps=budgets[i])
+           for i, p in enumerate(prompts)]
+    out = sched.run(jax.random.PRNGKey(seed))
+    tokens = {r: out[r].tokens.tolist() for r in ids}
+    return tokens, sched
+
+
+# ----------------------------------------------------------------------
+# Chunked prefill == one-shot prefill (greedy identity)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("sync", [True, False])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_chunked_prefill_identity_paged(triple, greedy, sync, chunk):
+    """Chunked admission commits the same greedy tokens as one-shot,
+    and bounds the per-jitted-call prompt commit by the chunk budget."""
+    prompts = [_prompt(PRE_A, [33 + i, 34, 4]) for i in range(3)] + \
+              [_prompt(PRE_B, [43, 44, 4])]
+    budgets = [1, 2, 2, 1]
+    plain, sched_p = _serve(
+        _engine(triple, greedy, paged=True, page_size=8), prompts,
+        budgets, sync=sync, cache_aware=True)
+    chunked, sched_c = _serve(
+        _engine(triple, greedy, paged=True, page_size=8), prompts,
+        budgets, sync=sync, cache_aware=True, chunk_tokens=chunk)
+    assert chunked == plain
+    # the decode-stall proxy: the most prompt tokens committed by ONE
+    # jitted call obeys the budget, while one-shot admission commits at
+    # least a whole prompt (and sums co-admitted prompts) in one call
+    assert 0 < sched_c.stats.prefill_commit_max <= chunk
+    assert sched_p.stats.prefill_commit_max >= max(p.size for p in prompts)
+    assert sched_c.stats.prefill_commit_max \
+        < sched_p.stats.prefill_commit_max
+
+
+def test_chunked_prefill_identity_dense(triple, greedy):
+    """Chunking is independent of the paged cache: dense engines chunk
+    through the same extend path."""
+    prompts = [_prompt(PRE_A, [33 + i, 34, 4]) for i in range(3)]
+    budgets = [1, 2, 1]
+    plain, _ = _serve(_engine(triple, greedy), prompts, budgets)
+    chunked, sched = _serve(_engine(triple, greedy), prompts, budgets,
+                            chunk_tokens=8)
+    assert chunked == plain
+    assert sched.stats.prefill_commit_max <= 8
+
+
+@pytest.mark.parametrize("pattern,window", [
+    (("full",), 0),
+    (("full", "local"), 12),
+    (("recurrent", "full"), 0),
+])
+def test_chunked_identity_across_stacks(greedy, pattern, window):
+    """full / sliding-window / hybrid-recurrent stacks: chunked prefill
+    is layout-agnostic (the recurrent state and local windows must
+    advance identically whether the prompt arrives in one or many
+    jitted calls)."""
+    base = ModelConfig(
+        name=f"t-slo-{'-'.join(pattern)}-{window}", family="dense"
+        if "recurrent" not in pattern else "hybrid",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=64, head_dim=16, dtype="float32", param_dtype="float32",
+        layer_pattern=pattern, window_size=window or 4096)
+    triple = _triple(base)
+    prompts = [_prompt(PRE_A, [33 + i, 34, 4]) for i in range(3)]
+    budgets = [1, 2, 1]
+    plain, _ = _serve(_engine(triple, greedy, paged=True, page_size=8),
+                      prompts, budgets)
+    chunked, _ = _serve(_engine(triple, greedy, paged=True, page_size=8),
+                        prompts, budgets, chunk_tokens=8)
+    assert chunked == plain
+
+
+# ----------------------------------------------------------------------
+# Preempt / resume
+# ----------------------------------------------------------------------
+
+def test_preempt_resume_round_trip(triple, nostop):
+    """Pause -> publish committed pages -> resume via radix splice:
+    tokens identical to the never-preempted run, pages conserved, and
+    the resume admission hits the prefix cache."""
+    victim = _prompt(PRE_A, [33, 34, 4])
+    # baseline: the same request, never preempted
+    base, _ = _serve(_engine(triple, nostop, paged=True, page_size=8),
+                     [victim], [3], capacity=1, cache_aware=True)
+
+    eng = _engine(triple, nostop, paged=True, page_size=8)
+    sched = GSIScheduler(eng, capacity=1, cache_aware=True)
+    rid = sched.submit(victim, request_id="v", max_steps=3)
+    rng = jax.random.PRNGKey(42)
+    rng, k = jax.random.split(rng)
+    sched.step(k)                         # one decode step, then pause
+    hits_before = sched.stats.prefix_hits
+    assert sched.preempt(rid)
+    assert sched.pool.slot_of(rid) is None     # slot released by the pause
+    pool = eng.pager
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == pool.num_pages
+    # paused, not dropped: the request is queued again and resumes
+    assert sched.queue and sched.queue[0].id == rid
+    out = sched.run(rng)
+    assert out[rid].tokens.tolist() == base["r0"]
+    assert out[rid].preemptions == 1
+    assert sched.stats.preemptions == 1
+    assert sched.stats.resumes == 1
+    # the splice: resume re-admission matched the published pages
+    assert sched.stats.prefix_hits > hits_before
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == pool.num_pages
+
+
+def test_preempt_not_preemptible_states(triple, nostop):
+    """preempt() returns False for unknown / queued / finished ids."""
+    eng = _engine(triple, nostop, paged=True, page_size=8)
+    sched = GSIScheduler(eng, capacity=1, cache_aware=True)
+    assert not sched.preempt("nope")
+    a = sched.submit(_prompt(PRE_A, [33, 34, 4]), max_steps=1)
+    b = sched.submit(_prompt(PRE_B, [43, 44, 4]), max_steps=1)
+    assert not sched.preempt(b)           # still queued (capacity 1)
+    out = sched.run(jax.random.PRNGKey(0))
+    assert set(out) == {a, b}
+    assert not sched.preempt(a)           # finished
+    assert sched.stats.preemptions == 0
+
+
+@pytest.mark.parametrize("sync", [True, False])
+def test_priority_preemption_pauses_lowest(triple, nostop, sync):
+    """A deferring higher-priority request pauses the lowest-priority
+    live slot; both finish with their un-contended greedy tokens."""
+    low = _prompt(PRE_A, [33, 34, 4])
+    high = _prompt(PRE_B, [43, 44, 4])
+    base_low, _ = _serve(_engine(triple, nostop, paged=True, page_size=8),
+                         [low], [3], capacity=2, cache_aware=True)
+    base_high, _ = _serve(_engine(triple, nostop, paged=True, page_size=8),
+                          [high], [2], capacity=2, cache_aware=True)
+
+    eng = _engine(triple, nostop, paged=True, page_size=8)
+    sched = GSIScheduler(eng, capacity=1, sync=sync, cache_aware=True)
+    lo = sched.submit(low, request_id="lo", max_steps=3)
+    rng = jax.random.PRNGKey(42)
+    rng, k = jax.random.split(rng)
+    sched.step(k)                         # low occupies the only slot
+    hi = sched.submit(high, request_id="hi", max_steps=2, priority=1)
+    out = sched.run(rng)
+    assert out[lo].tokens.tolist() == base_low["r0"]
+    assert out[hi].tokens.tolist() == base_high["r0"]
+    assert sched.stats.preemptions >= 1
+    assert sched.stats.resumes >= 1
+    assert out[lo].preemptions >= 1
+    assert out[hi].preemptions == 0
+    pool = eng.pager
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == pool.num_pages
+
+
+def test_priority_orders_admission(triple, greedy):
+    """Within the queue, the highest arrived priority class admits
+    first (FIFO inside a class)."""
+    eng = _engine(triple, greedy)
+    sched = GSIScheduler(eng, capacity=1)
+    sched.submit([5, 6, 4], request_id="p0", max_steps=1)
+    sched.submit([7, 3, 4], request_id="p2", max_steps=1, priority=2)
+    sched.submit([9, 8, 4], request_id="p1", max_steps=1, priority=1)
+    out = sched.run(jax.random.PRNGKey(0))
+    order = sorted(out.values(), key=lambda r: r.admitted_at)
+    assert [r.request_id for r in order] == ["p2", "p1", "p0"]
+
+
+# ----------------------------------------------------------------------
+# Deadlines
+# ----------------------------------------------------------------------
+
+def test_deadline_miss_accounting(triple, greedy):
+    """deadline_s is accounting only: a missed deadline is counted and
+    flagged on the response, the request still finishes normally."""
+    eng = _engine(triple, greedy)
+    sched = GSIScheduler(eng, capacity=2)
+    miss = sched.submit([5, 6, 4], request_id="miss", max_steps=2,
+                        deadline_s=0.0)
+    make = sched.submit([7, 3, 4], request_id="make", max_steps=1,
+                        deadline_s=3600.0)
+    none = sched.submit([9, 8, 4], request_id="none", max_steps=1)
+    out = sched.run(jax.random.PRNGKey(0))
+    assert out[miss].finish_reason            # finished despite the miss
+    assert out[miss].deadline_missed
+    assert not out[make].deadline_missed
+    assert not out[none].deadline_missed      # no deadline, never a miss
+    assert sched.stats.deadline_misses == 1
+
+
+# ----------------------------------------------------------------------
+# Streaming
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("sync", [True, False])
+def test_stream_reassembles_response(triple, greedy, sync):
+    """Per-request streams reassemble to the response tokens exactly,
+    with monotone step indices and a trailing final event."""
+    eng = _engine(triple, greedy, paged=True, page_size=8)
+    sched = GSIScheduler(eng, capacity=2, sync=sync, cache_aware=True)
+    streams = {}
+    for i in range(3):
+        streams[f"r{i}"] = TokenStream()
+        sched.submit(_prompt(PRE_A, [33 + i, 34, 4]), request_id=f"r{i}",
+                     max_steps=2, stream=streams[f"r{i}"])
+    out = sched.run(jax.random.PRNGKey(7))
+    for rid, stream in streams.items():
+        events = list(stream)
+        assert events, rid
+        assert events[-1].final
+        assert events[-1].finish_reason == out[rid].finish_reason
+        assert all(not e.final for e in events[:-1])
+        steps = [e.step for e in events[:-1]]
+        assert steps == sorted(steps)
+        got = np.concatenate([np.asarray(e.tokens, np.int32)
+                              for e in events]
+                             + [np.zeros((0,), np.int32)])
+        assert got.tolist() == out[rid].tokens.tolist()
+        # timing surfaced through the stream: first event at/after TTFT
+        assert events[0].t >= out[rid].arrival_time
+
+
+def test_stream_order_matches_materialize_order_async(triple, greedy):
+    """Under the async pipeline, a request's stream events fire in
+    materialize order — callback timestamps never run backwards."""
+    eng = _engine(triple, greedy, paged=True, page_size=8)
+    sched = GSIScheduler(eng, capacity=2, sync=False, cache_aware=True)
+    seen = []
+
+    def tap(event):
+        seen.append((event.request_id, event.step, event.final, event.t))
+
+    for i in range(4):
+        sched.submit(_prompt(PRE_A, [33 + i, 34, 4]), request_id=f"r{i}",
+                     max_steps=2, stream=tap)
+    sched.run(jax.random.PRNGKey(7))
+    assert seen
+    times = [t for *_x, t in seen]
+    assert times == sorted(times)
+    # per request: steps monotone, exactly one final event, fired last
+    for rid in {s[0] for s in seen}:
+        mine = [s for s in seen if s[0] == rid]
+        assert [s[2] for s in mine].count(True) == 1
+        assert mine[-1][2], rid
+        steps = [s[1] for s in mine[:-1]]
+        assert steps == sorted(steps)
+
+
+# ----------------------------------------------------------------------
+# Duplicate request ids (regression)
+# ----------------------------------------------------------------------
+
+def test_duplicate_request_id_rejected(triple, greedy):
+    """submit() rejects a reused id — queued, live, or already
+    finished (the silent-overwrite regression)."""
+    eng = _engine(triple, greedy)
+    sched = GSIScheduler(eng, capacity=1)
+    sched.submit([5, 6, 4], request_id="dup", max_steps=1)
+    with pytest.raises(ValueError, match="duplicate request id"):
+        sched.submit([7, 3, 4], request_id="dup", max_steps=1)
+    out = sched.run(jax.random.PRNGKey(0))
+    assert set(out) == {"dup"}
+    # the regression: after the first copy FINISHED, a reused id used to
+    # be accepted silently and clobbered the responses map
+    with pytest.raises(ValueError, match="duplicate request id"):
+        sched.submit([9, 8, 4], request_id="dup", max_steps=1)
+    assert set(sched.responses) == {"dup"}
