@@ -37,6 +37,39 @@ def run(fast: bool = False):
                 f"scores_hbm={scores / 1e6:.1f}MB;"
                 f"vmem_tile=128x128;flops={4 * B * H * S * S * hd / 1e9:.2f}G")
 
+    # paged attention, fp vs int8-quantized pages: same decode gather, the
+    # quant path reads half the page bytes (int8 codes) plus a per-page
+    # (KV,) f32 scale row that rides the block-table scalar-prefetch.
+    # Derived: achieved KV bytes per decoded token at each storage format.
+    B, H, KV, hd, ps, nblk = (2, 4, 2, 32, 16, 4) if fast \
+        else (4, 8, 2, 64, 16, 8)
+    P = B * nblk + 4
+    ks_ = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks_[0], (B, 1, H, hd))
+    kp = jax.random.normal(ks_[1], (P, ps, KV, hd))
+    vp = jax.random.normal(ks_[2], (P, ps, KV, hd))
+    pt = jnp.arange(B * nblk, dtype=jnp.int32).reshape(B, nblk)
+    pos = jnp.full((B,), nblk * ps - 1, jnp.int32)
+    fn = jax.jit(lambda *a: ref.paged_attention_ref(*a))
+    _, us_fp = common.timed(fn, q, kp, vp, pt, pos)
+    sc = jnp.max(jnp.abs(kp), axis=(1, 3)) / 127.0
+    kp8 = jnp.clip(jnp.round(kp / sc[:, None, :, None]),
+                   -127, 127).astype(jnp.int8)
+    vp8 = jnp.clip(jnp.round(vp / sc[:, None, :, None]),
+                   -127, 127).astype(jnp.int8)
+    fnq = jax.jit(lambda *a: ref.paged_attention_quant_ref(*a))
+    _, us_q = common.timed(fnq, q, kp8, vp8, sc, sc, pt, pos)
+    ctx = int(pos[0]) + 1
+    fp_bytes = 2 * ctx * KV * hd * 4            # k+v rows read, f32
+    q_bytes = 2 * ctx * KV * hd * 1 \
+        + 2 * nblk * KV * 4                     # int8 rows + page scales
+    common.emit("kernel/paged_attention_ref", us_fp,
+                f"kv_bytes_per_token={fp_bytes / 1e3:.1f}KB;ctx={ctx}")
+    common.emit("kernel/paged_attention_quant_ref", us_q,
+                f"kv_bytes_per_token={q_bytes / 1e3:.1f}KB;ctx={ctx};"
+                f"bytes_saving={fp_bytes / q_bytes:.2f}x;"
+                f"dequant_fused_in_kernel=true")
+
     # rwkv6 scan
     B, T, H, hd = (1, 64, 4, 32) if fast else (2, 128, 8, 64)
     ks = jax.random.split(jax.random.PRNGKey(6), 6)

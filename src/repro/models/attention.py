@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import quant
 from repro.models.common import ParamSpec, adtype, apply_rope, spec
 
 NEG_INF = -1e30
@@ -105,17 +106,30 @@ def init_self_cache(cfg, kind: str, batch: int, max_seq: int):
     return {"k": z, "v": z}
 
 
-def init_paged_self_cache(cfg, total_pages: int, page_size: int):
+def init_paged_self_cache(cfg, total_pages: int, page_size: int,
+                          kv_dtype=None):
     """Paged cache for one attention layer: K/V page pools, no batch dim.
 
     Positions are stored *absolutely* (page of position p = block table
     entry ``p // page_size``) for every layer kind; sliding-window layers
     trade the dense ring buffer's O(window) rows for page-table sharing
     and get their locality back through the decode mask instead.
+
+    ``kv_dtype`` selects the pool storage format (see
+    :mod:`repro.kernels.quant`): ``None`` keeps the activation dtype,
+    ``"bf16"`` is a plain half-width cast, and ``"int8"`` / ``"fp8"``
+    store codes plus per-page per-kv-head float32 scale tensors
+    (``ks``/``vs``, shaped ``(P, KV)``) that ride next to the pools in
+    the cache pytree and through COW branching with them.
     """
     KV, hd = cfg.num_kv_heads, cfg.head_dim
-    z = jnp.zeros((total_pages, page_size, KV, hd), adtype(cfg))
-    return {"kp": z, "vp": z}
+    dt = quant.pool_dtype(kv_dtype, adtype(cfg))
+    z = jnp.zeros((total_pages, page_size, KV, hd), dt)
+    out = {"kp": z, "vp": z}
+    if quant.is_quantized(kv_dtype):
+        sc = jnp.zeros((total_pages, KV), jnp.float32)
+        out["ks"], out["vs"] = sc, sc
+    return out
 
 
 def _cache_len(cfg, kind: str, max_seq: int) -> int:
@@ -160,10 +174,18 @@ def self_attention(cfg, p, x, *, kind: str, mode: str,
         k = apply_rope(k, pos_b, cfg.rope_theta)
         if pt is not None and "kp" in cache:
             from repro.kernels import ops
-            new_cache = _write_cache_paged(cache, k, v, positions, pt)
-            out = ops.paged_attention(q, new_cache["kp"], new_cache["vp"],
-                                      pt, positions, window=window,
-                                      scale=scale)
+            if "ks" in cache:
+                new_cache = _write_cache_paged_quant(cache, k, v,
+                                                     positions, pt)
+                out = ops.paged_attention_quant(
+                    q, new_cache["kp"], new_cache["vp"], new_cache["ks"],
+                    new_cache["vs"], pt, positions, window=window,
+                    scale=scale)
+            else:
+                new_cache = _write_cache_paged(cache, k, v, positions, pt)
+                out = ops.paged_attention(q, new_cache["kp"],
+                                          new_cache["vp"], pt, positions,
+                                          window=window, scale=scale)
         else:
             new_cache = _write_cache(cache, k, v, positions)
             mask = _decode_mask(new_cache["k"].shape[1], positions,
@@ -220,10 +242,58 @@ def _write_cache_paged(cache, k, v, positions, pt):
 
     def upd(pool, new):
         flat = pool.reshape((P * ps,) + pool.shape[2:])
-        return flat.at[rows].set(new[:, 0]).reshape(pool.shape)
+        return flat.at[rows].set(
+            new[:, 0].astype(pool.dtype)).reshape(pool.shape)
 
     out = dict(cache)
     out["kp"], out["vp"] = upd(kp, k), upd(vp, v)
+    return out
+
+
+def _write_cache_paged_quant(cache, k, v, positions, pt):
+    """Quantized paged write: re-quantize the touched page whole.
+
+    Each request's new (KV,hd) key/value lands in page
+    ``pt[b, pos // ps]`` at row ``pos % ps``.  The page is read back,
+    dequantized with its current scale, the new token's row inserted,
+    rows *beyond* the write row zeroed (they are stale garbage from a
+    previous occupant of the physical page and must not inflate the
+    amax), and the page re-quantized against a fresh per-kv-head scale
+    ``amax / QMAX``.  Re-quantization is exact for already-written rows
+    whenever the scale is unchanged (``round(code) == code``), and the
+    scale of a page only grows as rows fill in, so accumulated
+    round-trip error stays bounded by one quantization step.
+
+    The page-granularity scatter is race-free for the same reason the
+    dense row scatter is: a slot's tail page is exclusively owned
+    (published prefix pages are read-only by construction — writes only
+    ever target positions past the matched prefix), branch writes land
+    in per-branch scratch pages, and duplicate page indices only occur
+    for the shared trash page whose content is garbage by design.
+    """
+    ps = cache["kp"].shape[1]
+    dt = cache["kp"].dtype
+    qmax = quant.QMAX["int8"] if dt == jnp.int8 else quant.QMAX["fp8"]
+    blk = jnp.minimum(positions // ps, pt.shape[1] - 1)
+    page = jnp.take_along_axis(pt, blk[:, None], axis=1)[:, 0]  # (B,)
+    row = positions % ps                                        # (B,)
+    lane = jnp.arange(ps)[None, :]                              # (1, ps)
+    at_row = (lane == row[:, None])[:, :, None, None]
+    valid = (lane <= row[:, None])[:, :, None, None]
+
+    def upd(pool, sc, new):
+        fp = pool[page].astype(jnp.float32) * sc[page][:, None, :, None]
+        tok = new[:, 0].astype(jnp.float32)[:, None]            # (B,1,KV,hd)
+        fp = jnp.where(at_row, tok, fp)
+        fp = jnp.where(valid, fp, 0.0)
+        amax = jnp.max(jnp.abs(fp), axis=(1, 3))                # (B, KV)
+        nsc = jnp.maximum(amax, quant.EPS) / qmax
+        codes = quant.quantize_codes(fp / nsc[:, None, :, None], dt)
+        return pool.at[page].set(codes), sc.at[page].set(nsc)
+
+    out = dict(cache)
+    out["kp"], out["ks"] = upd(cache["kp"], cache["ks"], k)
+    out["vp"], out["vs"] = upd(cache["vp"], cache["vs"], v)
     return out
 
 

@@ -41,19 +41,22 @@ def block_specs(cfg, kind: str):
 
 
 def init_block_cache(cfg, kind: str, batch: int, max_seq: int, *,
-                     pages: int = 0, page_size: int = 0):
+                     pages: int = 0, page_size: int = 0, kv_dtype=None):
     """Zeroed decode cache for one block.
 
     ``pages > 0`` selects the paged layout for attention KV: page pools
     shared by all slots instead of per-slot dense rows.  Recurrent/RWKV
     state and cross-attention KV stay dense per slot (O(1)/write-once).
+    ``kv_dtype`` picks the page-pool storage format (int8/fp8 modes add
+    per-page scale tensors; see ``attn.init_paged_self_cache``).
     """
     if kind == "rwkv":
         return rwkv.init_rwkv_state(cfg, batch)
     if kind == "recurrent":
         return lru.init_lru_state(cfg, batch)
     if pages:
-        c = attn.init_paged_self_cache(cfg, pages, page_size)
+        c = attn.init_paged_self_cache(cfg, pages, page_size,
+                                       kv_dtype=kv_dtype)
     else:
         c = attn.init_self_cache(cfg, kind, batch, max_seq)
     if kind == "cross":
@@ -100,7 +103,8 @@ def block_apply(cfg, kind: str, p, x, *, mode: str, positions,
     else:
         self_cache = None
         if cache is not None:
-            self_cache = {k: cache[k] for k in ("k", "v", "kp", "vp")
+            self_cache = {k: cache[k]
+                          for k in ("k", "v", "kp", "vp", "ks", "vs")
                           if k in cache}
         y, new_cache = attn.self_attention(
             cfg, p["attn"], h, kind=("full" if kind in ("cross", "enc")

@@ -210,12 +210,14 @@ class Model:
         return jax.nn.sigmoid(logit)
 
     def init_cache(self, batch: int, max_seq: int, *, pages: int = 0,
-                   page_size: int = 0):
+                   page_size: int = 0, kv_dtype=None):
         """Zeroed cache pytree; ``pages > 0`` selects the paged layout
-        (attention leaves become shared page pools, see serving/pages.py)."""
+        (attention leaves become shared page pools, see serving/pages.py).
+        ``kv_dtype`` selects the page-pool storage format (int8/fp8 add
+        per-page scale tensors alongside the pools)."""
         cfg = self.cfg
         cache = {"blocks": None, "rem": None}
-        kw = dict(pages=pages, page_size=page_size)
+        kw = dict(pages=pages, page_size=page_size, kv_dtype=kv_dtype)
         if self.repeats:
             def stack_zero(kind):
                 one = B.init_block_cache(cfg, kind, batch, max_seq, **kw)

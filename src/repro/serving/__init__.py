@@ -24,6 +24,8 @@ from repro.serving.gsi_engine import (GSIServingEngine, EngineStats,  # noqa: F4
 from repro.serving.latency import LatencyModel, HW_V5E  # noqa: F401
 from repro.serving.pages import (PagePool, RadixIndex,  # noqa: F401
                                  pages_for)
+from repro.serving.quant import (quantize_draft_params,  # noqa: F401
+                                 quantized_fraction)
 from repro.serving.replica import Replica, build_replicas  # noqa: F401
 from repro.serving.router import (ReplicaRouter, POLICIES,  # noqa: F401
                                   HASH_TIERS, preamble_hash,

@@ -26,7 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-_PAGED_KEYS = ("kp", "vp")
+_PAGED_KEYS = ("kp", "vp", "ks", "vs")
 
 
 def _batch_dim(path, stacked_key: str = "blocks") -> int:
@@ -130,30 +130,42 @@ def paged_view(cache, pt, stacked_key: str = "blocks"):
 
     Gathers each pool leaf through the block table into the (B, S, KV, hd)
     layout the dense/score paths expect (S = nblk * page_size, absolute
-    positions).  Used by the shared-prefix scoring path and by tests; the
-    hot decode path never builds this — it reads through
-    ``kernels.ops.paged_attention`` instead.
+    positions).  Quantized pools ({'ks','vs'} present) are dequantized on
+    the way out — every row of logical block j carries block j's page
+    scale — so consumers always see fp K/V.  Used by the shared-prefix
+    scoring path and by tests; the hot decode path never builds this — it
+    reads through ``kernels.ops.paged_attention`` /
+    ``paged_attention_quant`` instead.
     """
     nblk = pt.shape[1]
 
-    def gather(pool):                                     # (P, ps, KV, hd)
+    def gather(pool, sc=None):                            # (P, ps, KV, hd)
         P, ps = pool.shape[0], pool.shape[1]
         rows = (pt[:, :, None] * ps
                 + jnp.arange(ps)[None, None, :]).reshape(pt.shape[0],
                                                          nblk * ps)
         flat = pool.reshape((P * ps,) + pool.shape[2:])
-        return jnp.take(flat, rows, axis=0)
+        out = jnp.take(flat, rows, axis=0)
+        if sc is not None:                                # (P, KV) scales
+            per_row = jnp.repeat(jnp.take(sc, pt, axis=0), ps, axis=1)
+            out = out.astype(jnp.float32) * per_row[..., None]
+        return out
 
     def walk(node, stacked):
         if isinstance(node, dict) and "kp" in node:
             out = {k: v for k, v in node.items()
                    if k not in _PAGED_KEYS}
+            ks, vs = node.get("ks"), node.get("vs")
             if stacked:
-                out["k"] = jax.vmap(gather)(node["kp"])
-                out["v"] = jax.vmap(gather)(node["vp"])
+                if ks is not None:
+                    out["k"] = jax.vmap(gather)(node["kp"], ks)
+                    out["v"] = jax.vmap(gather)(node["vp"], vs)
+                else:
+                    out["k"] = jax.vmap(gather)(node["kp"])
+                    out["v"] = jax.vmap(gather)(node["vp"])
             else:
-                out["k"] = gather(node["kp"])
-                out["v"] = gather(node["vp"])
+                out["k"] = gather(node["kp"], ks)
+                out["v"] = gather(node["vp"], vs)
             return out
         if isinstance(node, dict):
             return {k: walk(v, stacked or k == stacked_key)

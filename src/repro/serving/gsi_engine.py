@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.config import GSIConfig, ModelConfig
 from repro.core import gsi_select, rsd_select, soft_bon_select
+from repro.kernels import quant
 from repro.models import build_model
 from repro.sampling import sample_steps, score_and_append
 from repro.serving.engine import (branch_cache, branch_pages,
@@ -268,15 +269,29 @@ class GSIServingEngine:
                  rsd_threshold: float = 0.7, max_seq: int = 512,
                  shared_scoring: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int = 0,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, kv_dtype: Optional[str] = None,
+                 quantize_draft: bool = False):
         """Build the three models and jit the engine's serving phases.
 
         ``paged``/``page_size``/``num_pages`` select the paged KV layout
         (``num_pages=0`` sizes the pool to the dense capacity at state
         creation); ``prefix_cache`` enables the radix prefix index on
         paged engines (auto-disabled for recurrent/RWKV stacks).
+
+        ``kv_dtype`` picks the paged-pool storage format: ``None`` keeps
+        the model activation dtype, ``"bf16"`` casts pages, ``"int8"`` /
+        ``"fp8"`` store quantized codes with per-page per-kv-head scales
+        (dequant fused into the paged-attention kernel).
+        ``quantize_draft`` rounds the draft model's matmul weights
+        through int8 at load (serving/quant.py).
         """
         assert prm_cfg.reward_head
+        quant.validate_kv_dtype(kv_dtype)
+        if kv_dtype is not None and not paged:
+            raise ValueError("kv_dtype requires the paged KV layout "
+                             "(pass paged=True)")
+        self.kv_dtype = kv_dtype
+        self.quantize_draft = bool(quantize_draft)
         self.mode = mode
         self.gcfg = gcfg
         self.rsd_threshold = rsd_threshold
@@ -305,6 +320,11 @@ class GSIServingEngine:
         self.draft = build_model(draft_cfg)
         self.target = build_model(target_cfg)
         self.prm = build_model(prm_cfg)
+        if quantize_draft:
+            # fake-quant at load: every draft matmul sees int8-rounded
+            # weights, target/PRM weights stay untouched (serving/quant.py)
+            from repro.serving.quant import quantize_draft_params
+            params_s = quantize_draft_params(draft_cfg, params_s)
         self.params = (params_s, params_b, params_p)
         # cross-request prefix sharing (radix index over full committed
         # pages) is exact for pure-attention stacks: KV row i is a function
@@ -344,7 +364,8 @@ class GSIServingEngine:
     # State
     # ------------------------------------------------------------------
     def _fresh_caches(self, batch: int, *, pages: int = 0):
-        kw = dict(pages=pages, page_size=self.page_size) if pages else {}
+        kw = dict(pages=pages, page_size=self.page_size,
+                  kv_dtype=self.kv_dtype) if pages else {}
         return {
             "S": self.draft.init_cache(batch, self.max_seq, **kw),
             "B": self.target.init_cache(batch, self.max_seq, **kw),
@@ -372,7 +393,8 @@ class GSIServingEngine:
         n_scratch = batch * self.nmax * self.span
         total = self.num_pages + n_scratch + 1
         index = RadixIndex(self.page_size) if self.prefix_cache else None
-        self.pager = PagePool(self.num_pages, self.page_size, index=index)
+        self.pager = PagePool(self.num_pages, self.page_size, index=index,
+                              kv_dtype=self.kv_dtype)
         self._trash = total - 1
         self._released = set()
         scratch = (self.num_pages
@@ -518,9 +540,13 @@ class GSIServingEngine:
 
     def cache_memory_report(self, batch: int) -> dict:
         """HBM accounting: dense per-slot caches vs the paged pool, and —
-        the headline number — per-draft-step candidate-branch scratch
+        the headline numbers — per-draft-step candidate-branch scratch
         (dense ``repeat_cache`` materializes n full cache copies; paged
-        branching allocates ``n * span`` copy-on-write pages per slot)."""
+        branching allocates ``n * span`` copy-on-write pages per slot) and
+        pool *capacity* (pages / tokens / bytes at the engine's
+        ``kv_dtype``: page bytes are computed from the actual pool leaf
+        dtype, per-page scale tensors accounted separately, so two engines
+        differing only in ``kv_dtype`` report the exact storage ratio)."""
         from repro.models.attention import _cache_len
         from repro.models.common import adtype
         g = self.gcfg
@@ -530,11 +556,20 @@ class GSIServingEngine:
                 + list(model.remainder)
             return [k for k in kinds if k not in ("rwkv", "recurrent")]
 
-        def row_bytes(model):
-            """Bytes per cache position (k+v over attention layers)."""
+        def row_bytes(model, dtype=None):
+            """Bytes per pool cache position (k+v over attention layers),
+            at the *actual* page storage dtype unless overridden."""
             cfg = model.cfg
-            item = jnp.dtype(adtype(cfg)).itemsize
+            dt = dtype or quant.pool_dtype(self.kv_dtype, adtype(cfg))
+            item = jnp.dtype(dt).itemsize
             return sum(2 * cfg.num_kv_heads * cfg.head_dim * item
+                       for _ in attn_layers(model))
+
+        def scale_bytes(model):
+            """Per-page bytes of the (P, KV) float32 k/v scale tensors."""
+            if not quant.is_quantized(self.kv_dtype):
+                return 0
+            return sum(2 * model.cfg.num_kv_heads * 4
                        for _ in attn_layers(model))
 
         def dense_bytes(model):
@@ -550,22 +585,31 @@ class GSIServingEngine:
         if self.mode in ("gsi", "gsi_norej") and not self.shared_scoring:
             branched.append(self.target)
         dense_branch = n * sum(dense_bytes(m) for m in branched)
-        per_row = sum(row_bytes(m)
-                      for m in (self.draft, self.target, self.prm))
-        page_b = per_row * self.page_size
+        models = (self.draft, self.target, self.prm)
+        page_b = sum(row_bytes(m) for m in models) * self.page_size
+        scale_b = sum(scale_bytes(m) for m in models)
+        fp_page_b = sum(row_bytes(m, adtype(m.cfg))
+                        for m in models) * self.page_size
         num_pages = self.num_pages or batch * self.nblk
         n_scratch = batch * self.nmax * self.span
+        total_pages = num_pages + n_scratch + 1
         rep = {
+            "kv_dtype": self.kv_dtype or "fp",
             "page_size": self.page_size,
             "num_pages": num_pages,
             "scratch_pages": n_scratch,
             "bytes_per_page": page_b,
-            "dense_committed_bytes": sum(
-                dense_bytes(m)
-                for m in (self.draft, self.target, self.prm)),
+            "scale_bytes_per_page": scale_b,
+            "fp_bytes_per_page": fp_page_b,
+            # pool capacity at this kv_dtype: allocatable pages / tokens /
+            # the HBM they cost (page payload + per-page scales)
+            "capacity_pages": num_pages,
+            "capacity_tokens": num_pages * self.page_size,
+            "capacity_bytes": num_pages * (page_b + scale_b),
+            "dense_committed_bytes": sum(dense_bytes(m) for m in models),
             "dense_branch_bytes": dense_branch,
-            "paged_pool_bytes": (num_pages + n_scratch + 1) * page_b,
-            "paged_branch_bytes": n_scratch * page_b,
+            "paged_pool_bytes": total_pages * (page_b + scale_b),
+            "paged_branch_bytes": n_scratch * (page_b + scale_b),
         }
         rep["branch_reduction"] = (
             rep["dense_branch_bytes"] / max(1, rep["paged_branch_bytes"]))

@@ -47,6 +47,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.kernels import quant
 from repro.serving.radix import RadixIndex, RadixNode  # noqa: F401 (re-export)
 
 
@@ -61,21 +62,38 @@ class PagePool:
     num_pages: int
     page_size: int
     index: Optional[RadixIndex] = None    # attached = prefix caching on
+    kv_dtype: Optional[str] = None        # page storage format (see quant)
     free: List[int] = field(default=None)
     claimed: Dict[int, int] = field(default_factory=dict)   # slot -> unassigned claim
     assigned: Dict[int, List[int]] = field(default_factory=dict)  # slot -> pages by block
     refcount: Dict[int, int] = field(default_factory=dict)  # page -> live slot refs (>0)
     retained: Set[int] = field(default_factory=set)         # pages held by the index
     cached: Set[int] = field(default_factory=set)           # retained, refcount == 0
+    scale_slots: Set[int] = field(default_factory=set)      # pages w/ live scales
     evicted: int = 0              # lifetime cached pages evicted (stats)
     peak_assigned: int = 0        # peak *distinct* referenced pages (HBM)
     peak_in_use: int = 0          # referenced + outstanding claims
 
     def __post_init__(self):
         """Seed the free list with every allocatable page id."""
+        quant.validate_kv_dtype(self.kv_dtype)
         if self.free is None:
             # pop() takes from the end: keep ids ascending for readability
             self.free = list(range(self.num_pages - 1, -1, -1))
+
+    @property
+    def quantized(self) -> bool:
+        """True when pages carry per-page scale tensors (int8 / fp8).
+
+        A quantized pool tracks ``scale_slots``: the set of pages whose
+        scale entry is live on device.  A page's scale slot is claimed
+        the moment the page leaves circulation's free pool (first
+        reference) and released only when the page itself returns to the
+        free list — so scales are claimed / released / evicted in
+        lockstep with their page, and
+        ``scale_slots == referenced | cached`` always holds.
+        """
+        return quant.is_quantized(self.kv_dtype)
 
     # -- queries -------------------------------------------------------
     @property
@@ -135,6 +153,8 @@ class PagePool:
         rc = self.refcount.get(page, 0)
         if rc == 0:
             self.cached.discard(page)     # referenced pages leave the LRU
+            if self.quantized:
+                self.scale_slots.add(page)    # claimed with the page
         self.refcount[page] = rc + 1
 
     def _unref(self, page: int) -> None:
@@ -147,6 +167,7 @@ class PagePool:
             self.cached.add(page)         # survives: radix cache entry
         else:
             self.free.append(page)
+            self.scale_slots.discard(page)    # released with the page
 
     # -- prefix cache --------------------------------------------------
     def match(self, tokens) -> Tuple[List[int], int]:
@@ -190,6 +211,7 @@ class PagePool:
                 stray = self.cached.pop()
                 self.retained.discard(stray)
                 self.free.append(stray)
+                self.scale_slots.discard(stray)   # evicted with the page
                 freed += 1
                 self.evicted += 1
                 continue
@@ -198,6 +220,7 @@ class PagePool:
                 if p in self.cached:
                     self.cached.remove(p)
                     self.free.append(p)
+                    self.scale_slots.discard(p)   # evicted with the page
                     freed += 1
                     self.evicted += 1
         return freed

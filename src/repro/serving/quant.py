@@ -1,0 +1,126 @@
+"""Int8 weight quantization for the draft model (quantize at load).
+
+In GSI the draft model's decode is the per-token hot path, so its matmul
+weights are the raw speed lever: stored int8 with per-channel scales they
+cost half the bytes of bf16 (a quarter of fp32) and, on hardware with
+int8 matmul units, the dequant folds into the matmul epilogue.
+
+This module implements the *numerics* of that scheme as fake
+quantization: weights are quantized to int8 per-channel and immediately
+dequantized back to the parameter dtype at engine load, so every
+downstream matmul sees exactly the values an int8 kernel would compute
+with, while the CPU-reference model code stays unchanged.  Accuracy is
+therefore honest — speculative acceptance-rate and reward drift measured
+on the fake-quant path equal the real int8 deployment's — and asserted
+statistically (bounded drift, not token identity) by tests/test_quant.py
+and ``benchmarks/throughput.py --check``.
+
+Channel choice rides the :class:`~repro.models.common.ParamSpec` axis
+names, so it works across every draft family (attention, recurrent,
+RWKV) without per-module special cases:
+
+* the trailing axis is the output-channel axis: scales keep it and
+  reduce the leading (input) axes, except a ``layer`` stack axis which
+  is always kept (per-layer scales);
+* when the *input* side is a single named axis that is not the trailing
+  one (e.g. ``wq``'s ``embed`` in ``(embed, heads, head)``), only that
+  axis is reduced — finer per-(head, head_dim) channels for the QKV
+  projections;
+* embeddings / unembeddings, the PRM reward head, and any leaf with
+  fewer than two non-layer dims (norm gains, biases, decay vectors)
+  stay full precision — they are cheap and quantization-sensitive.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import quant
+from repro.models.common import is_param_spec
+
+#: Top-level parameter groups never quantized.
+_SKIP_GROUPS = ("embed", "reward_head")
+
+#: Axis names that mark a reducible *input* dimension of a weight.
+_INPUT_AXES = ("embed", "mlp")
+
+
+def _reduce_axes(spec) -> tuple:
+    """Axes of ``spec`` to amax-reduce for per-channel scales.
+
+    Keeps the trailing (output-channel) axis and any ``layer`` stack
+    axis; prefers reducing exactly the named input axes when present,
+    falling back to all other leading axes.
+    """
+    nd = len(spec.shape)
+    keep = {nd - 1}
+    keep.update(i for i, name in enumerate(spec.axes) if name == "layer")
+    named = tuple(i for i, name in enumerate(spec.axes)
+                  if name in _INPUT_AXES and i not in keep)
+    if named:
+        return named
+    return tuple(i for i in range(nd) if i not in keep)
+
+
+def _fake_quant_leaf(arr, spec):
+    """Quantize-dequantize one weight leaf to int8 per-channel."""
+    axes = _reduce_axes(spec)
+    if not axes:
+        return arr                      # nothing to reduce over: keep fp
+    f = arr.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(f), axis=axes, keepdims=True)
+    sc = jnp.maximum(amax, quant.EPS) / quant.QMAX["int8"]
+    codes = quant.quantize_codes(f / sc, jnp.int8)
+    return (codes.astype(jnp.float32) * sc).astype(arr.dtype)
+
+
+def quantize_draft_params(cfg, params):
+    """Fake-quantize a draft model's matmul weights to int8 at load.
+
+    ``cfg`` is the draft's ModelConfig (used to rebuild the ParamSpec
+    tree whose axis names pick the channel layout); ``params`` the
+    materialized parameter tree.  Returns a new tree of the same
+    structure/dtypes where every quantizable weight has been rounded
+    through int8; embeddings, heads and sub-matrix leaves pass through
+    untouched.
+    """
+    from repro.models import build_model
+    specs = build_model(cfg).param_specs()
+
+    def walk(spec_node, param_node, skip):
+        if is_param_spec(spec_node):
+            if skip or len(spec_node.shape) < 2 or \
+                    sum(1 for a in spec_node.axes if a != "layer") < 2:
+                return param_node
+            return _fake_quant_leaf(param_node, spec_node)
+        return {k: walk(spec_node[k], param_node[k],
+                        skip or k in _SKIP_GROUPS)
+                for k in param_node}
+
+    return walk(specs, params, False)
+
+
+def quantized_fraction(cfg, params) -> float:
+    """Fraction of parameter *elements* the int8 scheme touches.
+
+    Reporting helper for benchmarks: with the same rules as
+    :func:`quantize_draft_params`, what share of the draft's parameters
+    would actually be stored int8 (the bytes-saved headline).
+    """
+    from repro.models import build_model
+    specs = build_model(cfg).param_specs()
+    total, touched = 0, 0
+
+    def walk(spec_node, param_node, skip):
+        nonlocal total, touched
+        if is_param_spec(spec_node):
+            n = int(jnp.size(param_node))
+            total += n
+            if not (skip or len(spec_node.shape) < 2 or
+                    sum(1 for a in spec_node.axes if a != "layer") < 2):
+                touched += n
+            return
+        for k in param_node:
+            walk(spec_node[k], param_node[k], skip or k in _SKIP_GROUPS)
+
+    walk(specs, params, False)
+    return touched / max(1, total)

@@ -142,6 +142,13 @@ class ReplicaRouter:
         if hash_tier not in HASH_TIERS:
             raise ValueError(f"unknown hash tier {hash_tier!r}; "
                              f"choose from {HASH_TIERS}")
+        # a fleet must be storage-homogeneous: affinity routing assumes a
+        # request produces the same KV pages whichever replica serves it
+        dtypes = {getattr(e, "kv_dtype", None) for e in engines}
+        if len(dtypes) > 1:
+            raise ValueError(f"replicas disagree on kv_dtype: "
+                             f"{sorted(map(str, dtypes))}")
+        self.kv_dtype: Optional[str] = next(iter(dtypes), None)
         self.replicas: List[Replica] = build_replicas(
             engines, capacity=capacity, continuous=continuous,
             prompt_pad_len=prompt_pad_len, collect_stats=collect_stats,

@@ -118,13 +118,26 @@ def _check_pool(pool: PagePool) -> None:
     assert cached == pool.retained - referenced
     # the radix index never holds an unreachable (freed) page
     assert set(pool.index.nodes) == pool.retained
+    # quantized pools: per-page scale slots live in lockstep with their
+    # page — every out-of-circulation page carries exactly one scale
+    # slot, no freed page leaves an orphaned scale behind
+    if pool.quantized:
+        assert pool.scale_slots == referenced | cached
+    else:
+        assert not pool.scale_slots
 
 
 @settings(deadline=None, max_examples=40)
 @given(data=st.data())
 def test_page_pool_invariants_under_interleavings(data):
     num_pages = data.draw(st.integers(3, 12), label="num_pages")
-    pool = PagePool(num_pages, PS, index=RadixIndex(PS))
+    # quantized pools thread a per-page scale slot through the same
+    # machine: the lockstep invariant in _check_pool must hold across
+    # every interleaving, not just the happy path
+    kv_dtype = data.draw(st.sampled_from([None, "int8", "fp8"]),
+                         label="kv_dtype")
+    pool = PagePool(num_pages, PS, index=RadixIndex(PS),
+                    kv_dtype=kv_dtype)
     # small token alphabet so different "prompts" collide into shared
     # radix paths reasonably often
     next_slot = [0]
@@ -198,8 +211,10 @@ def test_per_replica_page_conservation_under_routed_admission(data):
     from repro.serving.router import preamble_hash
 
     n_replicas = data.draw(st.integers(2, 3), label="replicas")
+    kv_dtype = data.draw(st.sampled_from([None, "int8"]),
+                         label="kv_dtype")
     pools = [PagePool(data.draw(st.integers(3, 10), label=f"pages{i}"),
-                      PS, index=RadixIndex(PS))
+                      PS, index=RadixIndex(PS), kv_dtype=kv_dtype)
              for i in range(n_replicas)]
     next_slot = [0]
 

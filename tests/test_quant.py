@@ -1,0 +1,447 @@
+"""Quantized serving tests: int8/fp8 KV pages + int8 draft weights.
+
+Layers of coverage:
+  * kernels/quant.py helpers (dtype validation, pool dtypes, codes).
+  * Quantized paged-attention kernel (interpret mode) is BIT-IDENTICAL
+    to its per-cell oracle ``paged_attention_quant_cell_ref`` — the
+    jitted per-cell formulation mirrors the kernel's accumulation order
+    exactly (XLA CPU reductions are shape-dependent, so the fast batched
+    oracle only matches to float tolerance).
+  * The fast production oracle ``paged_attention_quant_ref`` matches the
+    kernel to tight float tolerance, and ``ops`` dispatch routes to it.
+  * K/V page write round-trip error is bounded by the symmetric-scale
+    quantization step (amax / QMAX per page per kv-head).
+  * Draft weight fake-quant: per-channel error bound, skip rules
+    (embeddings / reward head / vectors stay fp), dtype preservation.
+  * End-to-end: quantized engines run through the scheduler on full /
+    local / hybrid stacks with bounded acceptance-rate and mean-reward
+    drift vs the fp engine (statistical contract — quantization
+    legitimately perturbs logits, token identity is NOT expected).
+  * COW candidate branching copies the branch-point page's scales, and
+    radix prefix reuse serves quantized pages, with the scale-slot
+    ledger in lockstep through claim / publish / release / drain.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig, ModelConfig
+from repro.kernels import ops, quant, ref
+from repro.kernels.paged_attention import paged_attention_quant_pallas
+from repro.models import build_model
+from repro.serving import (GSIScheduler, GSIServingEngine, branch_cache,
+                           paged_view, quantize_draft_params,
+                           quantized_fraction)
+
+PAD = 0
+
+
+def _triple(draft):
+    target = dataclasses.replace(draft, name=draft.name + "-t",
+                                 num_layers=3)
+    prm = dataclasses.replace(target, name=draft.name + "-p",
+                              reward_head=True)
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+@pytest.fixture(scope="module")
+def gcfg():
+    return GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                     min_step_reward=-1.0)
+
+
+@pytest.fixture(scope="module")
+def dense_triple(tiny_dense):
+    return _triple(tiny_dense)
+
+
+def _quant_pages(key, P, ps, KV, hd, dtype="int8"):
+    """Random fp pages -> (codes, scales) under the per-page per-kv-head
+    symmetric scheme the engine uses."""
+    fp = jax.random.normal(key, (P, ps, KV, hd))
+    sc = jnp.maximum(jnp.max(jnp.abs(fp), axis=(1, 3)),
+                     quant.EPS) / quant.QMAX[dtype]
+    codes = quant.quantize_codes(fp / sc[:, None, :, None],
+                                 quant.pool_dtype(dtype, jnp.float32))
+    return codes, sc
+
+
+# ----------------------------------------------------------------------
+# kernels/quant.py helpers
+# ----------------------------------------------------------------------
+
+def test_kv_dtype_validation():
+    for kd in quant.KV_DTYPES:
+        quant.validate_kv_dtype(kd)
+    with pytest.raises(ValueError):
+        quant.validate_kv_dtype("int4")
+    assert quant.is_quantized("int8") and quant.is_quantized("fp8")
+    assert not quant.is_quantized(None) and not quant.is_quantized("bf16")
+    assert quant.pool_dtype(None, jnp.float32) == jnp.float32
+    assert quant.pool_dtype("bf16", jnp.float32) == jnp.bfloat16
+    assert quant.pool_dtype("int8", jnp.float32) == jnp.int8
+
+
+def test_quantize_codes_int8_saturates_and_rounds():
+    x = jnp.array([0.0, 0.4, 0.6, -1.5, 200.0, -200.0])
+    codes = quant.quantize_codes(x, jnp.int8)
+    assert codes.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  [0, 0, 1, -2, 127, -127])
+
+
+# ----------------------------------------------------------------------
+# Quantized paged-attention kernel vs oracles
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,hd,ps,nblk,window", [
+    (2, 4, 2, 16, 8, 3, 0),
+    (1, 2, 1, 8, 4, 4, 0),
+    (2, 2, 2, 8, 4, 5, 6),       # sliding window over small pages
+])
+def test_quant_kernel_bitwise_matches_cell_oracle(B, H, KV, hd, ps, nblk,
+                                                  window):
+    """Interpret-mode Pallas == the jitted per-cell oracle, bit for bit.
+
+    The cell oracle replays the kernel's per-(b, h) online-softmax
+    accumulation order in plain jnp; jitting it is essential — eager
+    execution and any batched formulation pick different XLA reduction
+    orders and only match to ~1e-6.
+    """
+    P = B * nblk + 2
+    ks = jax.random.split(jax.random.PRNGKey(B + hd + window), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kp, ksc = _quant_pages(ks[1], P, ps, KV, hd)
+    vp, vsc = _quant_pages(ks[2], P, ps, KV, hd)
+    pt = jax.random.randint(ks[3], (B, nblk), 0, P)
+    pos = jnp.asarray(np.linspace(0, nblk * ps - 1, B).astype(np.int32))
+    out = paged_attention_quant_pallas(q, kp, vp, ksc, vsc, pt, pos,
+                                       window=window, interpret=True)
+    cell = jax.jit(ref.paged_attention_quant_cell_ref,
+                   static_argnames=("window", "scale"))
+    want = cell(q, kp, vp, ksc, vsc, pt, pos, window=window)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_quant_kernel_close_to_fast_oracle():
+    """The fast batched production oracle agrees to float tolerance."""
+    B, H, KV, hd, ps, nblk = 2, 4, 2, 16, 8, 4
+    P = B * nblk + 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kp, ksc = _quant_pages(ks[1], P, ps, KV, hd)
+    vp, vsc = _quant_pages(ks[2], P, ps, KV, hd)
+    pt = jax.random.randint(ks[3], (B, nblk), 0, P)
+    pos = jnp.array([ps - 1, nblk * ps - 1])
+    out = paged_attention_quant_pallas(q, kp, vp, ksc, vsc, pt, pos,
+                                       interpret=True)
+    want = ref.paged_attention_quant_ref(q, kp, vp, ksc, vsc, pt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-6, rtol=3e-6)
+
+
+def test_quant_matches_fp_attention_within_quant_error():
+    """Dequantized paged attention tracks the fp paged attention within
+    the error the int8 rounding itself introduces."""
+    B, H, KV, hd, ps, nblk = 2, 4, 2, 16, 8, 4
+    P = B * nblk + 2
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kfp = jax.random.normal(ks[1], (P, ps, KV, hd))
+    vfp = jax.random.normal(ks[2], (P, ps, KV, hd))
+
+    def q8(x):
+        sc = jnp.maximum(jnp.max(jnp.abs(x), axis=(1, 3)),
+                         quant.EPS) / 127.0
+        return quant.quantize_codes(x / sc[:, None, :, None],
+                                    jnp.int8), sc
+
+    kp, ksc = q8(kfp)
+    vp, vsc = q8(vfp)
+    pt = jax.random.randint(ks[3], (B, nblk), 0, P)
+    pos = jnp.array([11, nblk * ps - 1])
+    got = ref.paged_attention_quant_ref(q, kp, vp, ksc, vsc, pt, pos)
+    want = ref.paged_attention_ref(q, kfp, vfp, pt, pos)
+    # attention output is a convex combination of V rows (+ softmax
+    # weight shift from K error); a few quantization steps bound it
+    step = float(jnp.max(jnp.maximum(ksc, vsc))) / 2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=6 * step)
+
+
+def test_ops_dispatch_quant_interpret(monkeypatch):
+    """REPRO_USE_PALLAS=interpret routes the quant op to the kernel."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "interpret")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 1, 2, 8))
+    kp, ksc = _quant_pages(ks[1], 4, 4, 2, 8)
+    vp, vsc = _quant_pages(ks[2], 4, 4, 2, 8)
+    pt = jnp.array([[2, 0, 3]])
+    pos = jnp.array([9])
+    np.testing.assert_allclose(
+        np.asarray(ops.paged_attention_quant(q, kp, vp, ksc, vsc, pt,
+                                             pos)),
+        np.asarray(ref.paged_attention_quant_ref(q, kp, vp, ksc, vsc,
+                                                 pt, pos)),
+        atol=3e-6, rtol=3e-6)
+
+
+# ----------------------------------------------------------------------
+# K/V page write round-trip
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_paged_write_roundtrip_error_bounded(dense_triple, gcfg,
+                                             kv_dtype):
+    """Prefill-committing a prompt into quantized pages and dequantizing
+    through paged_view reproduces the fp engine's committed K/V within
+    the accumulated quantization error.
+
+    The per-token admit scan requantizes the whole page whenever the
+    running amax grows (re-rounding under an unchanged scale is exact),
+    so a row written early can be double-rounded up to once per later
+    in-page write: worst-case error (ps/2) quantization steps, typical
+    error well under one.
+    """
+    cfgs, params = dense_triple
+    e0 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                          page_size=8)
+    e1 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                          page_size=8, kv_dtype=kv_dtype)
+    prompts = np.array([[5, 6, 7, 8, 9, 3, 4], [7, 3, 4, PAD, PAD, PAD,
+                                                PAD]], np.int32)
+    s0 = e0.init_state(prompts)
+    s1 = e1.init_state(prompts)
+    v0 = paged_view(s0["caches"]["S"], s0["pt"])
+    v1 = paged_view(s1["caches"]["S"], s1["pt"])
+    pos = np.asarray(s0["pos"])
+    # half a quantization step at the slice amax: int8 codes are uniform
+    # (amax/127); fp8 e4m3 has 3 mantissa bits, so its half-ulp near
+    # amax is amax * 2**-4 (float precision is relative, not uniform)
+    inv_step = 127.0 if kv_dtype == "int8" else 16.0
+    d0 = jax.tree_util.tree_flatten_with_path(v0)[0]
+    d1 = jax.tree_util.tree_flatten_with_path(v1)[0]
+    assert [p for p, _ in d0] == [p for p, _ in d1]
+    checked = 0
+    for (path, a), (_, b) in zip(d0, d1):
+        if not any(getattr(p, "key", None) in ("k", "v") for p in path):
+            continue
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        for r in range(prompts.shape[0]):
+            ra = a[:, r] if stacked else a[r]
+            rb = b[:, r] if stacked else b[r]
+            seq_ax = 1 if stacked else 0
+            sl = [slice(None)] * ra.ndim
+            sl[seq_ax] = slice(0, int(pos[r]))
+            ra, rb = ra[tuple(sl)], rb[tuple(sl)]
+            # double-rounding allows up to ps/2 accumulated steps, and
+            # the typical row stays within one
+            step = np.abs(ra).max() / inv_step
+            err = np.abs(ra - rb)
+            assert err.max() <= (8 / 2) * step + 1e-6
+            assert err.mean() <= step
+            checked += 1
+    assert checked > 0
+
+
+# ----------------------------------------------------------------------
+# Draft weight int8 fake-quant
+# ----------------------------------------------------------------------
+
+def test_quantize_draft_params_error_and_skips(tiny_dense):
+    params = build_model(tiny_dense).init(jax.random.PRNGKey(0))
+    qparams = quantize_draft_params(tiny_dense, params)
+    # structure and dtypes preserved
+    assert jax.tree_util.tree_structure(params) \
+        == jax.tree_util.tree_structure(qparams)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(qparams)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    # embeddings stay full precision
+    np.testing.assert_array_equal(
+        np.asarray(params["embed"]["embedding"]),
+        np.asarray(qparams["embed"]["embedding"]))
+    # matmul weights actually move, but within the per-channel step
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    qflat = {jax.tree_util.keystr(p): a for p, a in
+             jax.tree_util.tree_flatten_with_path(qparams)[0]}
+    moved = 0
+    for path, a in flat:
+        b = qflat[jax.tree_util.keystr(path)]
+        a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+        if not np.array_equal(a, b):
+            moved += 1
+            # |w - deq(q(w))| <= sc/2 <= amax / (2*127) elementwise;
+            # the global amax bounds every channel's step
+            assert np.abs(a - b).max() <= np.abs(a).max() / 127.0
+    assert moved > 0
+    frac = quantized_fraction(tiny_dense, params)
+    assert 0.0 < frac < 1.0
+
+
+def test_quantize_draft_skips_reward_head():
+    cfg = ModelConfig(
+        name="t-q-prm", family="dense", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=32, head_dim=16,
+        dtype="float32", param_dtype="float32", reward_head=True)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    qparams = quantize_draft_params(cfg, params)
+    np.testing.assert_array_equal(
+        np.asarray(params["reward_head"]["w"]),
+        np.asarray(qparams["reward_head"]["w"]))
+
+
+# ----------------------------------------------------------------------
+# End-to-end: bounded drift across stacks (the acceptance criterion)
+# ----------------------------------------------------------------------
+
+def _drift_stats(cfgs, params, gcfg, *, kv_dtype, quantize_draft, rng):
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=64, paged=True,
+                           page_size=8, kv_dtype=kv_dtype,
+                           quantize_draft=quantize_draft)
+    sched = GSIScheduler(eng, capacity=2, collect_stats=True)
+    for toks in ([5, 6, 4], [7, 3, 4], [9, 8, 4], [11, 5, 4]):
+        sched.submit(toks)
+    out = sched.run(rng)
+    assert len(out) == 4
+    pool = eng.pager
+    assert pool.num_assigned == 0
+    assert pool.num_free + pool.num_cached == eng.num_pages
+    if pool.quantized:
+        assert pool.scale_slots == pool.cached   # drained: no refs left
+    else:
+        assert not pool.scale_slots
+    return (sched.stats.accept_rate,
+            sched.stats.trace_mean("raw_rewards"))
+
+
+@pytest.mark.parametrize("pattern,family,window", [
+    (("full",), "dense", 0),
+    (("full", "local"), "dense", 12),
+    (("recurrent", "full"), "hybrid", 0),
+])
+def test_quantized_engine_bounded_drift(gcfg, pattern, family, window):
+    """int8 KV + int8 draft vs fp on the same workload and rng: the
+    drift contract is statistical — acceptance rate and mean PRM reward
+    stay close — NOT token identity (quantization perturbs logits).
+    Tiny deterministic workload, so the tolerances here are the test's
+    fixed-seed envelope, not the paper-scale 2pp/1% claim (that one is
+    asserted by ``benchmarks/throughput.py --check`` on the trained
+    triple)."""
+    base = ModelConfig(
+        name=f"t-q-{'-'.join(pattern)}", family=family, num_layers=2,
+        d_model=64, num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+        head_dim=16, dtype="float32", param_dtype="float32",
+        layer_pattern=pattern, window_size=window or 4096)
+    cfgs, params = _triple(base)
+    rng = jax.random.PRNGKey(11)
+    a_fp, r_fp = _drift_stats(cfgs, params, gcfg, kv_dtype=None,
+                              quantize_draft=False, rng=rng)
+    a_q, r_q = _drift_stats(cfgs, params, gcfg, kv_dtype="int8",
+                            quantize_draft=True, rng=rng)
+    assert abs(a_q - a_fp) <= 0.35, \
+        f"acceptance drifted: {a_q:.3f} vs fp {a_fp:.3f}"
+    assert abs(r_q - r_fp) <= 0.05 * max(abs(r_fp), 1e-3), \
+        f"mean reward drifted: {r_q:.4f} vs fp {r_fp:.4f}"
+
+
+def test_bf16_pages_run_and_report_half_bytes(dense_triple, gcfg):
+    """bf16 mode: plain cast, no scales, half the fp32 page bytes."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8, kv_dtype="bf16")
+    sched = GSIScheduler(eng, capacity=2)
+    sched.submit([5, 6, 4])
+    out = sched.run(jax.random.PRNGKey(0))
+    assert len(out) == 1
+    assert not eng.pager.quantized and not eng.pager.scale_slots
+    rep = eng.cache_memory_report(2)
+    assert rep["scale_bytes_per_page"] == 0
+    assert rep["fp_bytes_per_page"] == 2 * rep["bytes_per_page"]
+
+
+def test_kv_dtype_requires_paged(dense_triple, gcfg):
+    cfgs, params = dense_triple
+    with pytest.raises(ValueError):
+        GSIServingEngine(*cfgs, *params, gcfg, max_seq=48,
+                         kv_dtype="int8")
+    with pytest.raises(ValueError):
+        GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                         kv_dtype="int3")
+
+
+# ----------------------------------------------------------------------
+# COW branching + radix reuse on quantized pages
+# ----------------------------------------------------------------------
+
+def test_branch_cache_copies_scales_with_partial_page(dense_triple,
+                                                      gcfg):
+    """COW branching must carry the branch-point page's *scales* to each
+    branch's first scratch page — otherwise the copied codes would be
+    dequantized with the scratch page's stale scale."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=48, paged=True,
+                           page_size=8, kv_dtype="int8")
+    prompts = np.array([[5, 6, 7, 8, 9, 3, 2, 4, 11, 12, 13, 4]],
+                       np.int32)
+    state = eng.init_state(prompts)       # pos = 11: page 1 is partial
+    cache = state["caches"]["S"]
+    scr = state["scratch"][:, :2]
+    branched = branch_cache(cache, 2, state["pt"], state["pos"], scr,
+                            eng.page_size)
+    pt = np.asarray(state["pt"])
+    blk0 = int(state["pos"][0]) // 8
+    src = pt[0, blk0]
+
+    def leaves(tree, keys):
+        return [(p, a) for p, a in
+                jax.tree_util.tree_flatten_with_path(tree)[0]
+                if any(getattr(s, "key", None) in keys for s in p)]
+
+    pool_leaves = leaves(cache, ("kp", "vp", "ks", "vs"))
+    assert any(any(getattr(s, "key", None) in ("ks", "vs") for s in p)
+               for p, _ in pool_leaves)
+    bmap = {jax.tree_util.keystr(p): a for p, a in
+            leaves(branched, ("kp", "vp", "ks", "vs"))}
+    for path, a in pool_leaves:
+        b = bmap[jax.tree_util.keystr(path)]
+        a, b = np.asarray(a), np.asarray(b)
+        for jbr in range(2):
+            dst = int(np.asarray(scr)[0, jbr, 0])
+            if any(getattr(s, "key", None) == "blocks" for s in path):
+                np.testing.assert_array_equal(b[:, dst], a[:, src])
+            else:
+                np.testing.assert_array_equal(b[dst], a[src])
+
+
+def test_radix_reuse_on_quantized_pages(dense_triple, gcfg):
+    """Shared-preamble prompts on an int8 engine: the radix cache serves
+    quantized pages (codes + scales) across requests, and the scale-slot
+    ledger stays in lockstep through publish / share / drain."""
+    cfgs, params = dense_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=64, paged=True,
+                           page_size=8, kv_dtype="int8")
+    sched = GSIScheduler(eng, capacity=2, collect_stats=True)
+    pre = [5, 6, 7, 8, 9, 3, 2, 11]       # one full shared page
+    for i in range(4):
+        sched.submit(pre + [4 + i, 4])
+    out = sched.run(jax.random.PRNGKey(2))
+    assert len(out) == 4
+    pstat = sched.prefix_stats()
+    assert pstat["hits"] > 0 and pstat["pages_reused"] > 0
+    pool = eng.pager
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == eng.num_pages
+    assert pool.scale_slots == set(pool.refcount) | pool.cached
+    # cached pages (awaiting reuse) still hold their scales; a full
+    # eviction releases scales with their pages
+    assert pool.num_cached > 0
+    pool.evict(eng.num_pages)
+    assert pool.num_free == eng.num_pages and not pool.scale_slots
