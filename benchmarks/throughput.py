@@ -36,6 +36,12 @@ preamble-affinity routing, and two with round-robin: ``--check`` asserts
 all three produce identical per-request tokens and that affinity's
 aggregate radix hit-rate strictly beats round-robin's.
 
+A tensor-parallel row (only when >= 2 devices are visible — real, or
+forced host devices in the shard-smoke CI job) serves the EOS-governed
+workload through a (data=1, model=2) submesh engine and reports the
+per-device cache footprint; ``--check`` asserts bit-identical tokens to
+the unsharded paged run and a strictly smaller per-device footprint.
+
 A quantized-serving workload runs the same requests through a bf16-page
 engine and an int8-page + int8-draft engine; ``--check`` asserts the
 exact 2x page-capacity gain (int8 page payload is half bf16's) and the
@@ -426,6 +432,34 @@ def run(fast: bool = False, *, check: bool = False,
     accept_i8 = int8_q["stats"].accept_rate
     reward_fp = fp_q["stats"].trace_mean("raw_rewards")
     reward_i8 = int8_q["stats"].trace_mean("raw_rewards")
+    # tensor-parallel sharded serving: when >= 2 devices are visible
+    # (real, or XLA_FLAGS-forced host devices in the shard-smoke CI job)
+    # the same EOS-governed workload runs through a (data=1, model=2)
+    # submesh engine — target weights and target KV pool sharded over
+    # the 'model' axis, draft/PRM replicated, collect-then-compute
+    # all_gathers keeping tokens BIT-IDENTICAL to the unsharded paged
+    # run — and reports the per-device cache footprint.
+    tp_run = rep_tp = None
+    if len(jax.devices()) >= 2:
+        from repro.launch.mesh import carve_submeshes
+        eng_tp = GSIServingEngine(*cfgs, *params, g, mode="gsi",
+                                  max_seq=112, paged=True, page_size=16,
+                                  mesh=carve_submeshes(1, (1, 2))[0])
+        run_sched(eng_tp, warm, jax.random.PRNGKey(0), capacity=capacity,
+                  continuous=True)                            # compile
+        tp_run = run_sched(eng_tp, problems, rng, capacity=capacity,
+                           continuous=True)
+        _row("continuous_sharded_tp2", tp_run)
+        rep_tp = eng_tp.cache_memory_report(capacity)
+        _emit_mem("paged_sharded_tp2", rep_tp)
+        common.emit(
+            "throughput/sharded", 0.0,
+            f"tp={eng_tp.tp};devices={rep_tp['devices']};"
+            f"bytes_per_device={rep_tp['bytes_per_device']};"
+            f"capacity_tokens_per_device="
+            f"{rep_tp['capacity_tokens_per_device']};"
+            f"total_capacity_bytes={rep_tp['capacity_bytes']}")
+
     from repro.serving import quantized_fraction
     common.emit(
         "throughput/quant_drift", 0.0,
@@ -477,6 +511,21 @@ def run(fast: bool = False, *, check: bool = False,
         assert paged["tokens"] == cont_eos["tokens"], \
             f"paged engine drifted: {paged['tokens']} tokens != dense " \
             f"{cont_eos['tokens']}"
+        # tensor parallelism is a placement change, not an algorithm
+        # change: the (1,2)-submesh engine must reproduce the unsharded
+        # paged run token-for-token, with a genuinely smaller per-device
+        # KV footprint (the target pool's kv-head axis is split 2-way)
+        if tp_run is not None:
+            shard_env = json.loads(pathlib.Path(__file__).with_name(
+                "BENCH_SHARD.json").read_text())["thresholds"]
+            assert tp_run["token_lists"] == paged["token_lists"], \
+                "sharded engine drifted from the unsharded paged run"
+            assert rep_tp["devices"] == shard_env["devices"], \
+                rep_tp["devices"]
+            dev_ratio = rep_tp["bytes_per_device"] / rep_tp["capacity_bytes"]
+            assert dev_ratio <= shard_env["per_device_bytes_ratio_max"], \
+                f"per-device cache footprint ratio {dev_ratio:.3f} " \
+                f"exceeds {shard_env['per_device_bytes_ratio_max']}"
         # candidate-branch scratch HBM must shrink for n >= 4
         assert rep4["paged_branch_bytes"] < rep4["dense_branch_bytes"], \
             "paged branch scratch must undercut dense repeat_cache at n=4"

@@ -12,16 +12,20 @@ _MESH = None
 
 
 def set_mesh(mesh) -> None:
+    """Install ``mesh`` as the process-wide active mesh (None clears)."""
     global _MESH
     _MESH = mesh
 
 
 def get_mesh():
+    """The process-wide active mesh, or None when unset."""
     return _MESH
 
 
 @contextlib.contextmanager
 def use_mesh(mesh):
+    """Enter ``mesh`` (jax context manager + process-wide slot), restore
+    the previous active mesh on exit."""
     global _MESH
     prev = _MESH
     _MESH = mesh

@@ -88,14 +88,125 @@ def spec_pspec(s: ParamSpec, mesh, mode: str) -> P:
 
 
 def param_pspecs(spec_tree, mesh, mode: str):
+    """PartitionSpec tree for a ParamSpec tree under the mode's rules."""
     return jax.tree.map(lambda s: spec_pspec(s, mesh, mode), spec_tree,
                         is_leaf=is_param_spec)
 
 
 def param_shardings(spec_tree, mesh, mode: str):
+    """NamedSharding tree for a ParamSpec tree under the mode's rules."""
     return jax.tree.map(lambda s: NamedSharding(mesh, spec_pspec(s, mesh,
                                                                  mode)),
                         spec_tree, is_leaf=is_param_spec)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path tensor parallelism (path-gated, collect-then-compute)
+# ---------------------------------------------------------------------------
+#
+# The generic RULES above map *logical axis names*; the serving engine
+# instead needs a **path-gated** builder: the recurrent (lru) and rwkv
+# families reuse the logical names "mlp" / "heads" / "heads_flat" on
+# recurrence weights that have no gather hook in the model code, so a
+# name-based rule would silently shard them and corrupt the math.  Only
+# the three weight groups with trace-time collective hooks
+# (repro.distributed.tp) may shard: dense attention (wq/wk/wv/wo),
+# the dense FFN (wi_gate/wi_up/wo) and the embedding (embedding/unembed).
+
+_ATTN_KEYS = ("wq", "wk", "wv", "wo")
+_FFN_KEYS = ("wi_gate", "wi_up", "wo")
+_EMBED_KEYS = ("embedding", "unembed")
+# which logical axis carries the shard for each (group, leaf):
+_SHARD_AXIS = {
+    ("attn", "wq"): "heads", ("attn", "wk"): "kv", ("attn", "wv"): "kv",
+    ("attn", "wo"): "heads",
+    ("ffn", "wi_gate"): "mlp", ("ffn", "wi_up"): "mlp", ("ffn", "wo"): "mlp",
+    ("embed", "embedding"): "vocab", ("embed", "unembed"): "vocab",
+}
+
+
+def _path_keys(path):
+    return tuple(getattr(p, "key", getattr(p, "name", None)) for p in path)
+
+
+def serve_target_pspecs(spec_tree, mesh, *, plan, axis: str = "model"):
+    """PartitionSpec tree for the *target* model's params in mesh mode.
+
+    ``plan`` is :func:`repro.distributed.tp.tp_plan`'s dict — a weight
+    group shards only when its plan bit is set AND its shard dim divides
+    the axis size.  Leaves outside the three hooked groups (recurrent /
+    rwkv / moe / norms / reward head / time-mix) are replicated, whatever
+    their logical axis names say.  The shard dim is found by *name* in
+    ``ParamSpec.axes`` (layer-stacked leaves gain a leading "layer" axis,
+    so positional indexing would be wrong).
+    """
+    sizes = mesh_axis_sizes(mesh)
+    ways = sizes.get(axis, 1)
+
+    def leaf_spec(path, s):
+        keys = _path_keys(path)
+        group = None
+        for i, k in enumerate(keys):
+            if k == "attn" and i + 1 < len(keys) \
+                    and keys[i + 1] in _ATTN_KEYS:
+                group = ("attn", keys[i + 1])
+            elif k == "ffn" and i + 1 < len(keys) \
+                    and keys[i + 1] in _FFN_KEYS:
+                group = ("ffn", keys[i + 1])
+            elif k == "embed" and i + 1 < len(keys) \
+                    and keys[i + 1] in _EMBED_KEYS:
+                group = ("embed", keys[i + 1])
+        entries = [None] * len(s.shape)
+        if group is not None and ways > 1:
+            plan_key = {"attn": "attn", "ffn": "mlp",
+                        "embed": "vocab"}[group[0]]
+            logical = _SHARD_AXIS[group]
+            if plan.get(plan_key) and logical in s.axes:
+                dim = s.axes.index(logical)
+                if s.shape[dim] % ways == 0:
+                    entries[dim] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, spec_tree,
+                                            is_leaf=is_param_spec)
+
+
+def serve_state_pspecs(state, mesh, *, shard_attn: bool,
+                       target_key: str = "B", axis: str = "model"):
+    """PartitionSpec tree for an engine state dict in mesh mode.
+
+    Everything is replicated except the **target** model's attention KV
+    leaves (``state["caches"][target_key]``), which shard along the
+    kv-head axis when ``shard_attn`` and divisible:
+
+    * paged pools ``kp``/``vp`` (P, ps, KV, hd) [stacked: (R, ...)] and
+      dense ``k``/``v`` (B, S, KV, hd) shard dim ``ndim - 2``;
+    * per-page quant scales ``ks``/``vs`` (P, KV) [stacked: (R, P, KV)]
+      shard their last dim.
+
+    Cross-attention (``ck``/``cv``), recurrent state, block tables,
+    scratch, rng and the draft/PRM caches stay replicated — the draft
+    speculates locally; only target scoring pays collectives.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    ways = sizes.get(axis, 1)
+
+    def leaf_spec(path, leaf):
+        entries = [None] * getattr(leaf, "ndim", 0)
+        keys = _path_keys(path)
+        if shard_attn and ways > 1 and "caches" in keys:
+            ci = keys.index("caches")
+            if ci + 1 < len(keys) and keys[ci + 1] == target_key:
+                last = keys[-1]
+                if last in ("kp", "vp", "k", "v") and leaf.ndim >= 4 \
+                        and leaf.shape[-2] % ways == 0:
+                    entries[leaf.ndim - 2] = axis
+                elif last in ("ks", "vs") and leaf.ndim >= 2 \
+                        and leaf.shape[-1] % ways == 0:
+                    entries[leaf.ndim - 1] = axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, state)
 
 
 # ---------------------------------------------------------------------------
@@ -103,6 +214,7 @@ def param_shardings(spec_tree, mesh, mode: str):
 # ---------------------------------------------------------------------------
 
 def mesh_axis_sizes(mesh) -> dict:
+    """``{axis_name: size}`` for a mesh (works on fakes with .devices)."""
     return {a: s for a, s in zip(mesh.axis_names, mesh.devices.shape)}
 
 
@@ -174,5 +286,6 @@ def cache_pspecs(cache_shapes, mesh, *, stacked_key: str = "blocks"):
 
 
 def as_shardings(pspec_tree, mesh):
+    """Map a PartitionSpec tree to NamedShardings on ``mesh``."""
     return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
                         is_leaf=lambda x: isinstance(x, P))

@@ -4,6 +4,12 @@ Dispatch policy (env ``REPRO_USE_PALLAS``):
   "0" (default)  — pure-jnp reference path (CPU, dry-run lowering)
   "1"            — Pallas kernels, compiled for TPU
   "interpret"    — Pallas kernels in interpret mode (CPU correctness tests)
+
+Tensor-parallel serving note: under the mesh engine these wrappers run
+*inside* ``shard_map``, so paged-attention gathers see the local KV-head
+shard of each page pool (the KV-head dim is sharded over the ``model``
+axis) — per-shard shapes, no collectives here; the output projections in
+``repro.models`` all_gather afterwards.
 """
 from __future__ import annotations
 

@@ -5,10 +5,16 @@ throughput / latency-model numbers.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 16 --n 4 \
         --method gsi --capacity 8 [--train-steps 300] \
-        [--paged --replicas 2 --router affinity] [--sync | --async]
+        [--paged --replicas 2 --router affinity] [--sync | --async] \
+        [--mesh-shape 1x2 | --tp 2]
 
 ``--replicas N`` serves through N data-parallel replicas (one engine,
 page pool and radix index each) behind the preamble-affinity router.
+``--mesh-shape DxM`` (or ``--tp M``) additionally carves the visible
+devices into one disjoint submesh per replica and runs each replica's
+*target* model tensor-parallel over the submesh's ``model`` axis
+(draft and PRM stay replicated); tokens are bit-identical to the
+unsharded engine.
 Serving is asynchronous by default (``--async``): each scheduler keeps
 one decode step in flight and overlaps harvest/admission with device
 execution, and replicas are driven by a thread-per-replica fleet loop;
@@ -27,6 +33,7 @@ import numpy as np
 
 from repro.config import GSIConfig, ModelConfig, TrainConfig
 from repro.data import SyntheticReasoningTask, PAD
+from repro.launch.mesh import carve_submeshes
 from repro.serving import GSIScheduler, GSIServingEngine, ReplicaRouter
 from repro.serving.router import HASH_TIERS, POLICIES
 from repro.serving.latency import HW_V5E, LatencyModel, ModelCost
@@ -64,6 +71,22 @@ def apply_tuned_env(env=None) -> dict:
         if target.setdefault(key, val) == val:
             applied[key] = val
     return applied
+
+
+def parse_mesh_shape(text: str):
+    """Parse ``"DxM"`` (e.g. ``1x2``) into a ``(data, model)`` tuple.
+
+    ``--tp N`` is shorthand for ``--mesh-shape 1xN``; both feed
+    :func:`repro.launch.mesh.carve_submeshes`, which slices the visible
+    devices into one disjoint submesh per replica.
+    """
+    parts = text.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"--mesh-shape wants DxM (e.g. 1x2), got {text!r}")
+    data, model = (int(p) for p in parts)
+    if data < 1 or model < 1:
+        raise ValueError(f"--mesh-shape axes must be >= 1, got {text!r}")
+    return data, model
 
 
 def toy_triple(vocab: int = 16):
@@ -235,6 +258,15 @@ def main() -> None:
                     help="data-parallel serving replicas (each gets its "
                          "own engine, page pool and radix index; "
                          "capacity is per replica)")
+    ap.add_argument("--mesh-shape", default="", metavar="DxM",
+                    help="per-replica device submesh shape as "
+                         "data x model (e.g. 1x2 = 2-way tensor "
+                         "parallelism); carves the visible devices into "
+                         "one disjoint submesh per replica and shards "
+                         "each target model over its 'model' axis")
+    ap.add_argument("--tp", type=int, default=0, metavar="N",
+                    help="shorthand for --mesh-shape 1xN (N-way tensor "
+                         "parallelism per replica)")
     ap.add_argument("--router", default="affinity", choices=list(POLICIES),
                     help="replica placement policy (preamble-affinity "
                          "keeps shared-prefix requests on one replica)")
@@ -292,6 +324,19 @@ def main() -> None:
         # footprint of each engine
         capacity = max(1, capacity // args.replicas)
     kv_dtype = None if args.kv_dtype == "fp" else args.kv_dtype
+    if args.mesh_shape and args.tp:
+        raise SystemExit("use --mesh-shape or --tp, not both")
+    mesh_shape = None
+    if args.mesh_shape:
+        mesh_shape = parse_mesh_shape(args.mesh_shape)
+    elif args.tp > 1:
+        mesh_shape = (1, args.tp)
+    submeshes = [None] * args.replicas
+    if mesh_shape is not None:
+        submeshes = carve_submeshes(args.replicas, mesh_shape)
+        print(f"mesh: {args.replicas} replica(s) x "
+              f"{mesh_shape[0]}x{mesh_shape[1]} (data x model) submesh "
+              f"over {len(jax.devices())} visible device(s)", flush=True)
     engines = [
         GSIServingEngine(draft_cfg, target_cfg, prm_cfg, ps, pb, pp, g,
                          mode=args.method, max_seq=128,
@@ -299,8 +344,9 @@ def main() -> None:
                          num_pages=args.num_pages,
                          prefix_cache=not args.no_prefix_cache,
                          kv_dtype=kv_dtype,
-                         quantize_draft=args.quantize_draft)
-        for _ in range(args.replicas)]
+                         quantize_draft=args.quantize_draft,
+                         mesh=submeshes[i])
+        for i in range(args.replicas)]
     engine = engines[0]
     problems = [task.sample_problem() for _ in range(args.requests)]
 
@@ -337,6 +383,11 @@ def main() -> None:
               f"{rep['dense_branch_bytes']>>10} KiB "
               f"({rep['branch_reduction']:.1f}x); "
               f"peak assigned {rep.get('pages_peak', 0)} pages")
+        if rep["devices"] > 1:
+            print(f"  sharded over {rep['devices']} devices: "
+                  f"{rep['bytes_per_device']>>10} KiB/device "
+                  f"({rep['capacity_tokens_per_device']} tokens/device "
+                  f"at target-KV parity)")
         px = res["prefix"]
         print(f"prefix cache: hit_rate={px['hit_rate']:.2f} "
               f"prefill_tokens_skipped={px['hit_tokens']} "

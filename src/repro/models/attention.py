@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import tp as _tp
 from repro.kernels import quant
 from repro.models.common import ParamSpec, adtype, apply_rope, spec
 
@@ -193,7 +194,22 @@ def self_attention(cfg, p, x, *, kind: str, mode: str,
             out = gqa_attention(q, new_cache["k"], new_cache["v"], mask,
                                 scale)
 
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    # Tensor-parallel output projection: when this trace holds a head
+    # shard (wq gave us H/tp query heads), all-gather BOTH the per-head
+    # attention outputs and wo's head dim, then run the full einsum —
+    # exact concatenation followed by the identical contraction, so the
+    # result is bitwise-equal to unsharded (a psum over partial wo
+    # products would reorder float additions and is not).  Everything
+    # above is per-head math on exact head shards: q/k/v projections
+    # contract over the replicated d_model dim, rope / softmax / paged
+    # gathers are head-independent, and the KV cache leaves are sharded
+    # along the same kv-head axis the shard computes.
+    wo = p["wo"]
+    ax = _tp.axis()
+    if ax is not None and out.shape[2] != H:
+        out = jax.lax.all_gather(out, ax, axis=2, tiled=True)
+        wo = jax.lax.all_gather(wo, ax, axis=0, tiled=True)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo.astype(x.dtype))
     return y, new_cache
 
 

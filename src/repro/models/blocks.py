@@ -130,5 +130,5 @@ def block_apply(cfg, kind: str, p, x, *, mode: str, positions,
     if cfg.num_experts:
         y, aux = moe.moe_ffn(cfg, p["ffn"], h)
     else:
-        y = ffn_apply(p["ffn"], h)
+        y = ffn_apply(p["ffn"], h, d_ff=cfg.d_ff)
     return x + y, new_cache, aux

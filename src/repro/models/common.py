@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import tp as _tp
+
 # ---------------------------------------------------------------------------
 # ParamSpec machinery
 # ---------------------------------------------------------------------------
@@ -132,10 +134,23 @@ def ffn_specs(d, ff):
     }
 
 
-def ffn_apply(p, x):
+def ffn_apply(p, x, *, d_ff=None):
+    """SwiGLU FFN; ``d_ff`` (the config's global width) enables the
+    tensor-parallel hook: when the held weights are narrower than
+    ``d_ff`` inside a :func:`repro.distributed.tp.tensor_parallel`
+    trace, the gate/up matmuls run column-sharded (exact — they
+    contract over the replicated d_model dim) and the down-projection
+    all-gathers both the activation and ``wo`` before one full matmul,
+    which is bitwise-identical to the unsharded computation (a
+    psum-of-partials would reorder float additions and is not)."""
+    wo = p["wo"]
     gate = jax.nn.silu(x @ p["wi_gate"])
     h = gate * (x @ p["wi_up"])
-    return h @ p["wo"]
+    ax = _tp.axis()
+    if ax is not None and d_ff is not None and wo.shape[0] != d_ff:
+        h = jax.lax.all_gather(h, ax, axis=h.ndim - 1, tiled=True)
+        wo = jax.lax.all_gather(wo, ax, axis=0, tiled=True)
+    return h @ wo
 
 
 # ---------------------------------------------------------------------------
@@ -160,13 +175,41 @@ def embed_specs(cfg):
 
 
 def embed_tokens(cfg, p, tokens):
-    return p["embedding"].astype(adtype(cfg))[tokens]
+    """Token embedding lookup; vocab-sharded under a tp trace.
+
+    When the held embedding has fewer rows than ``padded_vocab(cfg)``
+    inside a tensor-parallel trace, each device gathers the rows whose
+    ids fall in its vocab shard (others zeroed) and a ``psum`` merges
+    them — exactly one shard contributes per token and x + 0 == x in
+    floating point, so the result is bitwise-identical to unsharded.
+    """
+    emb = p["embedding"]
+    ax = _tp.axis()
+    if ax is not None and emb.shape[0] != padded_vocab(cfg):
+        v_local = emb.shape[0]
+        local = tokens - jax.lax.axis_index(ax) * v_local
+        valid = (local >= 0) & (local < v_local)
+        rows = emb.astype(adtype(cfg))[jnp.clip(local, 0, v_local - 1)]
+        return jax.lax.psum(jnp.where(valid[..., None], rows, 0), ax)
+    return emb.astype(adtype(cfg))[tokens]
 
 
 def unembed(cfg, p, x):
+    """Project hidden states to (masked) vocab logits.
+
+    Under a tensor-parallel trace with a vocab-sharded unembedding,
+    each device computes its exact logit columns (the contraction runs
+    over the replicated d_model dim) and an ``all_gather`` over the
+    vocab dim reassembles the full row — bitwise-identical to the
+    unsharded matmul.  The padded-vocab mask applies globally after.
+    """
     w = p["unembed"] if "unembed" in p else p["embedding"].T
     logits = (x @ w.astype(x.dtype)).astype(jnp.dtype(cfg.logit_dtype))
     v = padded_vocab(cfg)
+    ax = _tp.axis()
+    if ax is not None and w.shape[-1] != v:
+        logits = jax.lax.all_gather(logits, ax, axis=logits.ndim - 1,
+                                    tiled=True)
     if v != cfg.vocab_size:
         # mask padding rows so they never win a softmax
         mask = jnp.arange(v) < cfg.vocab_size

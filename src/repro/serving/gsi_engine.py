@@ -40,6 +40,10 @@ import numpy as np
 
 from repro.config import GSIConfig, ModelConfig
 from repro.core import gsi_select, rsd_select, soft_bon_select
+from repro.distributed import tp as dtp
+from repro.distributed.sharding import (as_shardings, mesh_axis_sizes,
+                                        serve_state_pspecs,
+                                        serve_target_pspecs)
 from repro.kernels import quant
 from repro.models import build_model
 from repro.sampling import sample_steps, score_and_append
@@ -270,8 +274,23 @@ class GSIServingEngine:
                  shared_scoring: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int = 0,
                  prefix_cache: bool = True, kv_dtype: Optional[str] = None,
-                 quantize_draft: bool = False):
+                 quantize_draft: bool = False, mesh=None):
         """Build the three models and jit the engine's serving phases.
+
+        ``mesh`` (a ``jax.sharding.Mesh`` with a ``model`` axis — usually
+        one replica's submesh from ``launch.mesh.carve_submeshes``) turns
+        on tensor-parallel serving: the *target* model's attention /
+        FFN / vocab weights and its paged KV pools shard over the
+        ``model`` axis (``distributed.sharding.serve_target_pspecs``,
+        with per-group divisibility fallback to replication), while the
+        draft and PRM stay replicated — speculation is local, only
+        target scoring pays collectives.  Every jitted phase runs under
+        one ``shard_map``, so draft phase + rejection-fallback target
+        phase + commit remain ONE device-side step and the collectives
+        overlap host admission through the same ``StepTicket``
+        dispatch/materialize split; tokens stay bit-identical to the
+        unsharded engine (collect-then-compute collectives, see
+        ``repro.distributed.tp``).
 
         ``paged``/``page_size``/``num_pages`` select the paged KV layout
         (``num_pages=0`` sizes the pool to the dense capacity at state
@@ -334,14 +353,56 @@ class GSIServingEngine:
         # bit-identical outputs.
         self.prefix_cache = bool(prefix_cache and paged
                                  and self._prefix_supported())
-        self._jit_step = jax.jit(self._decode_core)
-        self._jit_commit = jax.jit(self._commit)
-        self._jit_admit = jax.jit(self._admit)
-        self._jit_extend = jax.jit(self._extend)
-        # standalone phase jits: not on the decode path (the fused
-        # _decode_core is), kept for phase-level tests and debugging
-        self._jit_draft_phase = jax.jit(self._draft_phase)
-        self._jit_target_phase = jax.jit(self._target_phase)
+        self.mesh = mesh
+        self.tp = 1
+        self._tp_plan = {"attn": False, "mlp": False, "vocab": False}
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError("mesh mode needs a 'model' axis; got "
+                                 f"axes {mesh.axis_names}")
+            if shared_scoring:
+                raise NotImplementedError(
+                    "shared_scoring under a mesh is not supported yet "
+                    "(score_candidates bypasses the tp unembed hook)")
+            if target_cfg.num_experts:
+                raise NotImplementedError(
+                    "MoE targets under the serving mesh are not "
+                    "supported yet (moe_ffn runs its own expert-parallel "
+                    "shard_map, which cannot nest inside the engine's)")
+            self.tp = mesh_axis_sizes(mesh).get("model", 1)
+            # only stacks made of hooked layer kinds may shard; a
+            # recurrent/rwkv/hybrid target serves replicated (mesh mode
+            # still works — every collective hook simply no-ops).
+            kinds = list(self.target.pattern) * self.target.repeats \
+                + list(self.target.remainder)
+            if all(k in ("full", "local", "cross", "enc") for k in kinds):
+                self._tp_plan = dtp.tp_plan(target_cfg, self.tp)
+            self._target_pspecs = serve_target_pspecs(
+                self.target.param_specs(), mesh, plan=self._tp_plan)
+            rep = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            params_s = jax.device_put(
+                params_s, jax.tree.map(lambda _: rep, params_s))
+            params_b = jax.device_put(
+                params_b, as_shardings(self._target_pspecs, mesh))
+            params_p = jax.device_put(
+                params_p, jax.tree.map(lambda _: rep, params_p))
+            self.params = (params_s, params_b, params_p)
+            # the shard_map'd jits need the state *structure* (dense vs
+            # paged, batch size) — built lazily by fresh_state()
+            self._jit_step = self._jit_commit = None
+            self._jit_admit = self._jit_extend = None
+            self._jit_draft_phase = self._jit_target_phase = None
+        else:
+            self._jit_step = jax.jit(self._bind(self._decode_core))
+            self._jit_commit = jax.jit(self._bind(self._commit))
+            self._jit_admit = jax.jit(self._bind(self._admit))
+            self._jit_extend = jax.jit(self._bind(self._extend))
+            # standalone phase jits: not on the decode path (the fused
+            # _decode_core is), kept for phase-level tests and debugging
+            self._jit_draft_phase = jax.jit(self._bind(self._draft_phase))
+            self._jit_target_phase = jax.jit(
+                self._bind(self._target_phase))
         # host-side mirrors of per-slot bookkeeping, updated at admit /
         # materialize time: dispatch_decode assigns pages from these (a
         # read of the live device state would block on the in-flight
@@ -349,6 +410,65 @@ class GSIServingEngine:
         self._known_pos = np.zeros((0,), np.int64)
         self._known_done = np.zeros((0,), bool)
         self._inflight_steps = 0      # dispatched but not yet materialized
+
+    def _bind(self, phase):
+        """Close a params-threading phase over ``self.params``.
+
+        The phases take the three param trees as an explicit first
+        argument (so the mesh mode can hand shard_map their shardings);
+        the single-device jits bind the engine's own params here, which
+        keeps the jitted attributes' call signature ``(state, ...)``.
+        """
+        def call(state, *extra):
+            return phase(self.params, state, *extra)
+        return call
+
+    def _build_mesh_jits(self, state) -> None:
+        """Compile the engine's phases as one ``shard_map`` each.
+
+        Needs a structural ``state`` template (dense vs paged layout,
+        batch size), so it runs from :meth:`fresh_state` rather than
+        ``__init__``.  Every phase body traces inside the
+        ``tensor_parallel`` context: the target's sharded leaves enter
+        as local shards per ``serve_target_pspecs`` /
+        ``serve_state_pspecs`` and the model hooks supply the
+        collectives; draft/PRM params, rng keys, block tables and all
+        control state stay replicated (spec ``P()``).
+        """
+        mesh = self.mesh
+        R = jax.sharding.PartitionSpec()
+        state_specs = serve_state_pspecs(
+            state, mesh, shard_attn=self._tp_plan["attn"])
+
+        def rep(tree):
+            return jax.tree.map(lambda _: R, tree)
+
+        pspecs = (rep(self.params[0]), self._target_pspecs,
+                  rep(self.params[2]))
+
+        def wrap(phase, n_extra, out_specs):
+            def body(params, st, *extra):
+                with dtp.tensor_parallel("model"):
+                    return phase(params, st, *extra)
+            sm = dtp.shard_map_compat(
+                body, mesh=mesh,
+                in_specs=(pspecs, state_specs) + (R,) * n_extra,
+                out_specs=out_specs)
+            jitted = jax.jit(sm)
+
+            def call(st, *extra):
+                return jitted(self.params, st, *extra)
+            return call
+
+        def commit(params, st, tokens):
+            return self._commit(params, st, tokens)
+
+        self._jit_step = wrap(self._decode_core, 2, (state_specs, R))
+        self._jit_commit = wrap(commit, 1, state_specs)
+        self._jit_admit = wrap(self._admit, 4, state_specs)
+        self._jit_extend = wrap(self._extend, 3, state_specs)
+        self._jit_draft_phase = wrap(self._draft_phase, 1, R)
+        self._jit_target_phase = wrap(self._target_phase, 1, R)
 
     def _prefix_supported(self) -> bool:
         """Sharing is exact iff every layer of all three models keeps its
@@ -385,7 +505,7 @@ class GSIServingEngine:
         self._inflight_steps = 0
         if not self.paged:
             state["caches"] = self._fresh_caches(batch)
-            return state
+            return self._place_state(state)
         # paged layout: `num_pages` allocatable pages + a static scratch
         # region for copy-on-write branching + one trash page that absorbs
         # the benign garbage-at-pos writes of done/never-admitted rows.
@@ -393,8 +513,15 @@ class GSIServingEngine:
         n_scratch = batch * self.nmax * self.span
         total = self.num_pages + n_scratch + 1
         index = RadixIndex(self.page_size) if self.prefix_cache else None
+        # bytes-weighted LRU: the pool knows what one page of this
+        # engine's kv_dtype actually costs (payload + quant scales), so
+        # cached quantized pages are evicted at half the priority of
+        # full-precision ones of equal staleness
+        mem = self.cache_memory_report(batch)
         self.pager = PagePool(self.num_pages, self.page_size, index=index,
-                              kv_dtype=self.kv_dtype)
+                              kv_dtype=self.kv_dtype,
+                              page_bytes=mem["bytes_per_page"]
+                              + mem["scale_bytes_per_page"])
         self._trash = total - 1
         self._released = set()
         scratch = (self.num_pages
@@ -410,6 +537,19 @@ class GSIServingEngine:
         # every older one (stepping a stale state raises, see _check_gen)
         self._gen += 1
         state["gen"] = jnp.asarray(self._gen, jnp.int32)
+        return self._place_state(state)
+
+    def _place_state(self, state):
+        """Mesh mode: place a fresh state on the replica's submesh (the
+        target's KV leaves sharded over the kv-head axis, everything
+        else replicated) and build the shard_map'd phase jits against
+        its structure.  Identity on single-device engines."""
+        if self.mesh is None:
+            return state
+        specs = serve_state_pspecs(state, self.mesh,
+                                   shard_attn=self._tp_plan["attn"])
+        state = jax.device_put(state, as_shardings(specs, self.mesh))
+        self._build_mesh_jits(state)
         return state
 
     def _check_gen(self, state):
@@ -613,6 +753,21 @@ class GSIServingEngine:
         }
         rep["branch_reduction"] = (
             rep["dense_branch_bytes"] / max(1, rep["paged_branch_bytes"]))
+        # per-device split under the serving mesh: the target's KV pages
+        # shard tp-ways along the kv-head axis; draft/PRM pages (and the
+        # target's when attention can't shard) replicate on every device,
+        # so each device's effective tokens-worth of HBM is the capacity
+        # scaled by its byte share.
+        shard = self.tp if self._tp_plan["attn"] else 1
+        tgt_page = row_bytes(self.target) * self.page_size \
+            + scale_bytes(self.target)
+        per_dev_page = (page_b + scale_b) - tgt_page + tgt_page // shard
+        rep["devices"] = 1 if self.mesh is None else \
+            int(np.prod(self.mesh.devices.shape))
+        rep["bytes_per_device"] = num_pages * per_dev_page
+        rep["capacity_tokens_per_device"] = round(
+            rep["capacity_tokens"] * rep["bytes_per_device"]
+            / max(1, rep["capacity_bytes"]))
         if self.pager is not None:
             # distinct pages (num_referenced) are the HBM truth: a page
             # spliced into several slots' tables occupies one page
@@ -688,9 +843,9 @@ class GSIServingEngine:
     # ------------------------------------------------------------------
     # Jitted phases
     # ------------------------------------------------------------------
-    def _commit(self, state, step_tokens, row_live=None):
+    def _commit(self, params, state, step_tokens, row_live=None):
         """Append step_tokens (B,L) to the three committed caches."""
-        ps, pb, pp = self.params
+        ps, pb, pp = params
         caches = state["caches"]
         pt = state.get("pt")
         new = {}
@@ -719,7 +874,7 @@ class GSIServingEngine:
             out["gen"] = state["gen"]
         return out
 
-    def _admit(self, state, admit_mask, tails, starts, live):
+    def _admit(self, params, state, admit_mask, tails, starts, live):
         """Prefill prompt *tails* (B,Lt; PAD-padded) into the slots where
         ``admit_mask`` is True; every other slot passes through untouched.
 
@@ -750,9 +905,9 @@ class GSIServingEngine:
         if "pt" in state:
             new["pt"], new["scratch"] = state["pt"], state["scratch"]
             new["gen"] = state["gen"]
-        return self._commit(new, tails[:, 1:], row_live=admit_mask)
+        return self._commit(params, new, tails[:, 1:], row_live=admit_mask)
 
-    def _extend(self, state, mask, chunks, live):
+    def _extend(self, params, state, mask, chunks, live):
         """Commit continuation prefill ``chunks`` (B,W; PAD-padded) into
         mid-prefill slots where ``mask`` is True (chunked prefill).
 
@@ -764,7 +919,7 @@ class GSIServingEngine:
         ``live`` flips rows whose final chunk this is to done=False; rows
         mid-prefill stay device-done and inert under the decode masks.
         """
-        new = self._commit(state, chunks, row_live=mask)
+        new = self._commit(params, state, chunks, row_live=mask)
         new["done"] = jnp.where(mask, ~live, state["done"])
         return new
 
@@ -778,11 +933,11 @@ class GSIServingEngine:
         return branch_cache(cache, n, state["pt"], state["pos"], scr,
                             self.page_size), bpt
 
-    def _draft_phase(self, state, rng):
+    def _draft_phase(self, params, state, rng):
         """Sample n draft candidates; score with target + PRM."""
         g = self.gcfg
         n = g.n
-        ps, pb, pp = self.params
+        ps, pb, pp = params
         k1, k2 = jax.random.split(rng)
         pend = expand_requests(state["pending"], n)
         pos = expand_requests(state["pos"], n)
@@ -854,11 +1009,11 @@ class GSIServingEngine:
         out["max_reward"] = jnp.max(out["rewards"], axis=-1)
         return out
 
-    def _target_phase(self, state, rng):
+    def _target_phase(self, params, state, rng):
         """S-BoN with the target model (rejection fallback / sbon_b)."""
         g = self.gcfg
         n = g.n_target or g.n
-        _, pb, pp = self.params
+        _, pb, pp = params
         k1, k2 = jax.random.split(rng)
         pend = expand_requests(state["pending"], n)
         pos = expand_requests(state["pos"], n)
@@ -883,7 +1038,7 @@ class GSIServingEngine:
     # ------------------------------------------------------------------
     # Host loop
     # ------------------------------------------------------------------
-    def _decode_core(self, state, rng, rng_target):
+    def _decode_core(self, params, state, rng, rng_target):
         """One whole engine step as a single traced computation.
 
         Draft phase, the rejection-fallback target phase under a
@@ -896,7 +1051,7 @@ class GSIServingEngine:
         """
         g = self.gcfg
         if self.mode == "sbon_b":
-            tp = self._target_phase(state, rng)
+            tp = self._target_phase(params, state, rng)
             chosen = tp["chosen"]
             accept = jnp.ones_like(state["done"])
             max_r = jnp.max(tp["rewards"], axis=-1)
@@ -904,7 +1059,7 @@ class GSIServingEngine:
             target_count = jnp.sum(tp["cands"] != PAD).astype(jnp.int32)
             rewards = tilted = ratio = None
         else:
-            dp = self._draft_phase(state, rng)
+            dp = self._draft_phase(params, state, rng)
             accept = dp["accept"]
             max_r = dp["max_reward"]
             draft_count = jnp.sum(dp["cands"] != PAD).astype(jnp.int32)
@@ -914,7 +1069,7 @@ class GSIServingEngine:
                 else None
 
             def fallback(_):
-                tp = self._target_phase(state, rng_target)
+                tp = self._target_phase(params, state, rng_target)
                 return (tp["chosen"],
                         jnp.sum(tp["cands"] != PAD).astype(jnp.int32))
 
@@ -928,7 +1083,7 @@ class GSIServingEngine:
         done_prev = state["done"]
         # early stop (paper B.2): all draft rewards below min threshold
         failed = max_r < g.min_step_reward
-        new_state = self._commit(state, chosen)
+        new_state = self._commit(params, state, chosen)
         eos = jnp.any(chosen == g.eos_token_id, axis=1)
         new_done = done_prev | eos | (failed & ~done_prev)
         new_state["done"] = new_done

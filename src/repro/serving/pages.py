@@ -63,6 +63,8 @@ class PagePool:
     page_size: int
     index: Optional[RadixIndex] = None    # attached = prefix caching on
     kv_dtype: Optional[str] = None        # page storage format (see quant)
+    page_bytes: int = 0                   # bytes per page (0 = uniform LRU)
+    page_cost_override: Dict[int, int] = field(default_factory=dict)
     free: List[int] = field(default=None)
     claimed: Dict[int, int] = field(default_factory=dict)   # slot -> unassigned claim
     assigned: Dict[int, List[int]] = field(default_factory=dict)  # slot -> pages by block
@@ -196,17 +198,35 @@ class PagePool:
         self.retained.update(new)
         return len(new)
 
-    def evict(self, need: int) -> int:
-        """Evict LRU unreferenced cached pages until ``need`` are freed.
+    def page_cost(self, page: int) -> int:
+        """Eviction cost of a cached page, in bytes.
 
-        Whole radix subtrees are dropped at once so no page is left
+        Defaults to the pool-wide ``page_bytes`` (what the engine wires
+        in from its memory report — a cached int8 page costs half a bf16
+        one, so it survives proportionally longer under the
+        bytes-weighted LRU).  ``page_cost_override`` supplies per-page
+        costs for heterogeneous pools and tests; ``0``/unset everywhere
+        degenerates to uniform cost, i.e. plain LRU.
+        """
+        return self.page_cost_override.get(page, self.page_bytes) or 1
+
+    def evict(self, need: int) -> int:
+        """Evict cached pages until ``need`` are freed, cheapest-score
+        first.
+
+        The victim order is the bytes-weighted LRU of
+        :meth:`RadixIndex.lru_page`: among unreferenced cached pages the
+        one minimizing ``clock / page_cost`` goes first — old *and*
+        expensive pages are reclaimed before young or cheap (quantized)
+        ones, and uniform costs reduce to plain LRU.  Whole radix
+        subtrees are dropped at once so no page is left
         retained-but-unreachable: refcount-0 pages of the subtree go back
         to the free list now, still-referenced ones merely lose their cache
         retention and will be freed by their last ``release``.
         """
         freed = 0
         while freed < need and self.cached:
-            page = self.index.lru_page(self.cached)
+            page = self.index.lru_page(self.cached, cost=self.page_cost)
             if page is None:              # cached page vanished from trie
                 stray = self.cached.pop()
                 self.retained.discard(stray)

@@ -98,20 +98,35 @@ class RadixIndex:
             node = child
         return new
 
-    def lru_page(self, among: Set[int]) -> Optional[int]:
+    def lru_page(self, among: Set[int], cost=None) -> Optional[int]:
         """The page in ``among`` whose node is least recently used.
 
-        Deterministic tie-break: the lowest page id wins at equal clocks.
+        ``cost`` (page -> positive int, typically the page's bytes)
+        weights the eviction priority: the victim minimizes
+        ``clock / cost``, so between equally-stale pages the *expensive*
+        one goes first, and a cheap page (a cached int8 page costs half
+        a bf16 one) must be proportionally staler to be chosen over a
+        costly newer one.  The comparison is exact integer
+        cross-multiplication — no float ties — and a uniform cost
+        reduces it to plain LRU, clock alone.
+
+        Deterministic tie-break: the lowest page id wins at equal
+        scores (``sorted`` iteration + strict ``<``).
         """
         best = None
         best_clock = None
+        best_cost = 1
         for page in sorted(among):
             node = self.nodes.get(page)
             if node is None:
                 continue
-            if best_clock is None or node.clock < best_clock:
+            c = 1 if cost is None else max(1, int(cost(page)))
+            # node.clock / c < best_clock / best_cost, exactly
+            if best_clock is None \
+                    or node.clock * best_cost < best_clock * c:
                 best = page
                 best_clock = node.clock
+                best_cost = c
         return best
 
     def drop_subtree(self, page: int) -> List[int]:

@@ -14,6 +14,14 @@ request lands on decides whether its prompt's preamble pages are already
 cached there: the router's preamble-affinity policy exists to keep
 requests with a common prefix on the replica that holds its pages.
 
+Replicas compose with tensor parallelism: each engine may additionally
+own a disjoint device *submesh* (``--mesh-shape`` /
+:func:`repro.launch.mesh.carve_submeshes`) over which its target model
+is sharded — data parallel *across* replicas, tensor parallel *within*
+one.  The router checks the submeshes are homogeneous in shape and
+mutually disjoint; all replica/scheduler logic here is mesh-agnostic
+because the engine hides sharding behind its jitted phase surface.
+
 For the thread-per-replica fleet loop each replica carries a thread-safe
 *inbox*: ``submit`` only enqueues (any thread, no scheduler state
 touched) and the thread driving the replica drains the inbox into the

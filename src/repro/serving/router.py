@@ -149,6 +149,33 @@ class ReplicaRouter:
             raise ValueError(f"replicas disagree on kv_dtype: "
                              f"{sorted(map(str, dtypes))}")
         self.kv_dtype: Optional[str] = next(iter(dtypes), None)
+        # ... and mesh-homogeneous: all replicas sharded the same way
+        # (tensor-parallel degree changes per-replica capacity and
+        # latency, which would skew every load-balancing policy), over
+        # *disjoint* submeshes (the thread-per-replica loop drives them
+        # concurrently; a shared device would interleave collectives).
+        meshes = [getattr(e, "mesh", None) for e in engines]
+        shapes = {None if m is None else
+                  (tuple(m.devices.shape), tuple(m.axis_names))
+                  for m in meshes}
+        if len(shapes) > 1:
+            raise ValueError(
+                f"replicas disagree on mesh shape: {sorted(map(str, shapes))}"
+                " — carve one submesh per replica with the same "
+                "(data, model) shape (launch.mesh.carve_submeshes)")
+        seen: set = set()
+        for m in meshes:
+            if m is None:
+                continue
+            devs = {d.id for d in m.devices.flat}
+            if devs & seen:
+                raise ValueError(
+                    "replica submeshes overlap on device id(s) "
+                    f"{sorted(devs & seen)}; each replica needs its own "
+                    "disjoint device slice")
+            seen |= devs
+        self.tp: int = max((getattr(e, "tp", 1) or 1) for e in engines) \
+            if engines else 1
         self.replicas: List[Replica] = build_replicas(
             engines, capacity=capacity, continuous=continuous,
             prompt_pad_len=prompt_pad_len, collect_stats=collect_stats,

@@ -136,8 +136,19 @@ def test_page_pool_invariants_under_interleavings(data):
     # every interleaving, not just the happy path
     kv_dtype = data.draw(st.sampled_from([None, "int8", "fp8"]),
                          label="kv_dtype")
+    # heterogeneous per-page byte costs (as under a sharded pool whose
+    # cached pages mix quantized and fp footprints): the bytes-weighted
+    # LRU only reorders the victim schedule — every ledger invariant
+    # must hold regardless.  Zero costs exercise the `or 1` floor.
+    page_bytes = data.draw(st.sampled_from([0, 64, 256]),
+                           label="page_bytes")
+    override = data.draw(
+        st.dictionaries(st.integers(0, num_pages - 1),
+                        st.integers(0, 500), max_size=num_pages),
+        label="page_cost_override")
     pool = PagePool(num_pages, PS, index=RadixIndex(PS),
-                    kv_dtype=kv_dtype)
+                    kv_dtype=kv_dtype, page_bytes=page_bytes,
+                    page_cost_override=override)
     # small token alphabet so different "prompts" collide into shared
     # radix paths reasonably often
     next_slot = [0]

@@ -445,3 +445,62 @@ def test_radix_reuse_on_quantized_pages(dense_triple, gcfg):
     assert pool.num_cached > 0
     pool.evict(eng.num_pages)
     assert pool.num_free == eng.num_pages and not pool.scale_slots
+
+
+def _two_cached_pages(page_bytes=0, override=None):
+    """A pool holding exactly two cached pages, page A strictly staler
+    than page B (published earlier, never re-touched)."""
+    from repro.serving.pages import PagePool
+    from repro.serving.radix import RadixIndex
+    ps = 4
+    pool = PagePool(4, ps, index=RadixIndex(ps), page_bytes=page_bytes,
+                    page_cost_override=dict(override or {}))
+    pool.claim(0, 1)
+    pool.ensure(0, 1)
+    pa = pool.assigned[0][0]
+    pool.publish([1] * ps, [pa])
+    pool.claim(1, 1)
+    pool.ensure(1, 1)
+    pb = pool.assigned[1][0]
+    pool.publish([2] * ps, [pb])
+    pool.release(0)
+    pool.release(1)
+    assert pool.cached == {pa, pb}
+    return pool, pa, pb
+
+
+def test_bytes_weighted_lru_uniform_cost_is_plain_lru():
+    """With a uniform page cost (or none), the victim is the plain LRU
+    minimum: the staler page goes first regardless of the byte weight."""
+    for kwargs in ({}, {"page_bytes": 512},
+                   {"page_bytes": 512, "override": None}):
+        pool, pa, pb = _two_cached_pages(**kwargs)
+        pool.evict(1)
+        assert pa not in pool.cached and pb in pool.cached
+
+
+def test_bytes_weighted_lru_prefers_evicting_expensive_page():
+    """A cheap stale page (e.g. a cached int8 page at half the bf16
+    bytes) survives over an expensive newer one when the byte ratio
+    outweighs the recency ratio: victim minimizes clock/cost exactly."""
+    pool, pa, pb = _two_cached_pages(page_bytes=100,
+                                     override=None)
+    # A is stale but cheap (quantized), B newer but 8x the bytes:
+    # clock_a/50 > clock_b/400 for adjacent clocks -> B is the victim.
+    pool.page_cost_override[pa] = 50
+    pool.page_cost_override[pb] = 400
+    pool.evict(1)
+    assert pb not in pool.cached and pa in pool.cached
+    # ledger conservation survives the weighted eviction
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == pool.num_pages
+
+
+def test_bytes_weighted_lru_tie_breaks_on_lowest_page_id():
+    """Exactly equal clock/cost scores fall back to the lowest page id
+    (sorted iteration + strict <), keeping eviction deterministic."""
+    from repro.serving.radix import RadixIndex
+    idx = RadixIndex(2)
+    idx.insert([1, 2, 3, 4], [7, 3])      # same tick => same clock
+    assert idx.lru_page({7, 3}) == 3
+    assert idx.lru_page({7, 3}, cost=lambda p: 9) == 3

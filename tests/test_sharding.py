@@ -1,15 +1,28 @@
 """Sharding rules + a real 8-device pjit/shard_map integration (subprocess).
 
-The multi-device test runs in a subprocess because the 512-placeholder
+The multi-device tests run in subprocesses because the placeholder
 device count must be set before jax initializes (conftest keeps the main
 test process on the single real CPU device).
+
+Tensor-parallel *serving* coverage (the mesh engine):
+  * sharded == unsharded BIT-IDENTICAL tokens through the scheduler —
+    a 2-replica router where each replica owns a (data=1, model=2)
+    submesh, sync AND async, greedy AND temperature>0 (subprocess);
+  * the same identity across local and hybrid attention stacks;
+  * sharding-spec assertions: target weights and target KV pool carry
+    the ``model`` axis, draft/PRM stay replicated, submeshes disjoint;
+  * an in-process (1,1)-mesh engine for tier-1 coverage of the
+    shard_map decode path on the single real CPU device, including
+    page-ledger conservation under the sharded pool.
 """
+import dataclasses
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
+import numpy as np
 import pytest
 
 from repro.models.common import ParamSpec
@@ -128,3 +141,168 @@ def test_multidevice_train_step_runs():
     out = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=900)
     assert "MULTIDEV_OK" in out.stdout, out.stdout + out.stderr
+
+
+def _run_subprocess(script, marker, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert marker in out.stdout, out.stdout + out.stderr
+
+
+SHARDED_ROUTER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.tree_util as jtu
+    from repro.config import GSIConfig
+    from repro.launch.mesh import carve_submeshes
+    from repro.launch.serve import make_frontend, toy_triple
+    from repro.models import build_model
+    from repro.serving.gsi_engine import GSIServingEngine
+
+    draft, target, prm = toy_triple()
+    rng = jax.random.PRNGKey(0)
+    ps = build_model(draft).init(jax.random.fold_in(rng, 1))
+    pb = build_model(target).init(jax.random.fold_in(rng, 2))
+    pp = build_model(prm).init(jax.random.fold_in(rng, 3))
+    prompts = [[5, 6, 7, 8, 9, 3, 2, 11, 4, 4],
+               [5, 6, 7, 8, 9, 3, 2, 11, 6], [2, 3, 4], [9, 8, 7, 6],
+               [5, 6, 7, 8, 9, 3, 2, 11, 12], [1, 2]]
+
+    def serve(meshes, temperature, sync):
+        g = GSIConfig(n=2, max_step_tokens=6, max_steps=3,
+                      temperature=temperature)
+        engs = [GSIServingEngine(draft, target, prm, ps, pb, pp, g,
+                                 paged=True, page_size=4, mesh=m)
+                for m in meshes]
+        sched = make_frontend(engs, capacity=2, sync=sync)
+        ids = [sched.submit(np.asarray(p, np.int32)) for p in prompts]
+        res = sched.run(jax.random.PRNGKey(42))
+        return [np.asarray(res[i].tokens) for i in ids], engs
+
+    subs = carve_submeshes(2, (1, 2))
+    for sync, temp in ((True, 0.0), (True, 0.7), (False, 0.7)):
+        base, _ = serve([None, None], temp, sync)
+        shard, engs = serve(subs, temp, sync)
+        for a, b in zip(base, shard):
+            assert a.shape == b.shape and (a == b).all(), (sync, temp)
+        print(f"identical sync={sync} temp={temp}")
+
+    # sharding-spec assertions on the last sharded fleet
+    eng = engs[0]
+    tspecs = [str(l.sharding.spec)
+              for l in jtu.tree_leaves(eng.params[1])]
+    assert any("model" in s for s in tspecs), "target not sharded"
+    rep = [str(l.sharding.spec)
+           for l in jtu.tree_leaves((eng.params[0], eng.params[2]))]
+    assert all("model" not in s for s in rep), "draft/PRM not replicated"
+    state = eng.init_state(np.asarray([[3, 4, 5, 6]], np.int32))
+    kv = [str(l.sharding.spec)
+          for p, l in jtu.tree_flatten_with_path(state)[0]
+          if "'B'" in str(p) and getattr(l, "ndim", 0) >= 4]
+    assert any("model" in s for s in kv), "target KV pool not sharded"
+    ids0 = {d.id for d in subs[0].devices.flat}
+    ids1 = {d.id for d in subs[1].devices.flat}
+    assert not ids0 & ids1, "submeshes overlap"
+    print("SHARDED_ROUTER_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_router_bitwise_identity():
+    """2 replicas x (data=1, model=2) submeshes through the router are
+    bit-identical to the unsharded 2-replica fleet — sync and async,
+    greedy and temperature>0 — with target weights/KV verifiably on the
+    ``model`` axis and draft/PRM replicated."""
+    _run_subprocess(SHARDED_ROUTER_SCRIPT, "SHARDED_ROUTER_OK")
+
+
+SHARDED_STACKS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np
+    import jax
+    from repro.config import GSIConfig
+    from repro.launch.mesh import carve_submeshes
+    from repro.launch.serve import make_frontend, toy_triple
+    from repro.models import build_model
+    from repro.serving.gsi_engine import GSIServingEngine
+
+    draft, target, prm = toy_triple()
+    rng = jax.random.PRNGKey(0)
+    ps = build_model(draft).init(jax.random.fold_in(rng, 1))
+    pp = build_model(prm).init(jax.random.fold_in(rng, 3))
+    mesh = carve_submeshes(1, (1, 2))[0]
+    prompts = [[3, 4, 5, 6, 7], [2, 3, 4], [9, 8, 7, 6, 5, 4]]
+
+    for name, pat in (("local", ("local",)),
+                      ("hybrid", ("full", "local"))):
+        tgt = dataclasses.replace(target, layer_pattern=pat,
+                                  window_size=8)
+        pb = build_model(tgt).init(jax.random.fold_in(rng, 2))
+        for temp in (0.0, 0.7):
+            toks = []
+            for m in (None, mesh):
+                g = GSIConfig(n=2, max_step_tokens=6, max_steps=3,
+                              temperature=temp)
+                eng = GSIServingEngine(draft, tgt, prm, ps, pb, pp, g,
+                                       paged=True, page_size=4, mesh=m)
+                sched = make_frontend(eng, capacity=2, sync=True)
+                ids = [sched.submit(np.asarray(p, np.int32))
+                       for p in prompts]
+                res = sched.run(jax.random.PRNGKey(9))
+                toks.append([np.asarray(res[i].tokens) for i in ids])
+            for a, b in zip(*toks):
+                assert a.shape == b.shape and (a == b).all(), (name,
+                                                               temp)
+        print("stack", name, "ok")
+    print("SHARDED_STACKS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_stacks_bitwise_identity():
+    """Sliding-window (local) and hybrid full/local target stacks keep
+    the sharded==unsharded token identity through the scheduler."""
+    _run_subprocess(SHARDED_STACKS_SCRIPT, "SHARDED_STACKS_OK")
+
+
+def test_mesh_single_device_engine_matches_unsharded(tiny_dense):
+    """In-process tier-1 coverage: a (1,1) mesh engine routes decode
+    through shard_map on the single real CPU device and stays
+    bit-identical to the plain jit engine, with the sharded page pool's
+    ledger conserved (bytes-weighted eviction armed via page_bytes)."""
+    from repro.config import GSIConfig
+    from repro.launch.mesh import carve_submeshes
+    from repro.models import build_model
+    from repro.serving import GSIScheduler, GSIServingEngine
+
+    target = dataclasses.replace(tiny_dense, name="t1-tgt", num_layers=3)
+    prm = dataclasses.replace(target, name="t1-prm", reward_head=True)
+    params = (build_model(tiny_dense).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    g = GSIConfig(n=2, max_step_tokens=5, max_steps=3, temperature=0.7)
+    mesh = carve_submeshes(1, (1, 1))[0]
+    prompts = [[5, 6, 7, 8, 9], [2, 3, 4]]
+    toks = []
+    for m in (None, mesh):
+        eng = GSIServingEngine(tiny_dense, target, prm, *params, g,
+                               max_seq=64, paged=True, page_size=4,
+                               mesh=m)
+        sched = GSIScheduler(eng, capacity=2)
+        ids = [sched.submit(np.asarray(p, np.int32)) for p in prompts]
+        res = sched.run(jax.random.PRNGKey(5))
+        toks.append([np.asarray(res[i].tokens) for i in ids])
+    for a, b in zip(*toks):
+        assert a.shape == b.shape and (a == b).all()
+    assert eng.tp == 1 and eng.mesh is not None
+    pool = eng.pager
+    assert pool.page_bytes > 0  # bytes-weighted LRU armed in production
+    assert pool.num_free + pool.num_referenced + pool.num_cached \
+        == eng.num_pages
