@@ -28,6 +28,13 @@ scheduler's SLO counters (preemptions, resumes, deadline misses,
 
     PYTHONPATH=src python -m benchmarks.loadgen --smoke --check \
         --json out.json
+
+``--restart`` runs the warm-restart scenario instead: kill the server
+halfway through a greedy workload, warm-restart a fresh engine from the
+radix-cache snapshot, and compare cold-vs-warm TTFT p95 and hit rates.
+With ``--check`` it asserts the ``benchmarks/BENCH_WARM.json`` contract
+(token identity with the uninterrupted run, warm hit rate, restored
+page count, ledger conservation).
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ from repro.serving import (GSIScheduler, GSIServingEngine, TokenStream,
                            merge_engine_stats)
 
 BASELINE = pathlib.Path(__file__).with_name("BENCH_SLO.json")
+BASELINE_WARM = pathlib.Path(__file__).with_name("BENCH_WARM.json")
 
 
 # ----------------------------------------------------------------------
@@ -271,6 +279,96 @@ def forced_preempt(*, page_size: int = 16):
 
 
 # ----------------------------------------------------------------------
+# Warm-restart scenario (--restart): kill mid-run, restore, compare
+# ----------------------------------------------------------------------
+def restart_scenario(*, capacity: int = 2, count: int = 8, seed: int = 7,
+                     snapshot_path=None):
+    """Kill the server halfway through a greedy workload and warm-restart
+    it from a radix-cache snapshot.
+
+    Three runs, all greedy (temperature 0) with arrival offsets zeroed:
+    an *uninterrupted* reference over all ``count`` requests; a *cold
+    phase* serving the first half on a fresh engine, after which the
+    engine's hot cache is snapshotted (``save_cache``) and the process
+    "dies"; and a *warm phase* serving the second half on a brand-new
+    engine restored from the snapshot.  All prompts carry the shared
+    long preamble, so the warm phase's admissions splice restored pages
+    instead of re-prefilling.
+
+    Reports cold-vs-warm TTFT p95 and radix hit-rates, whether the
+    interrupted run's tokens are identical to the uninterrupted
+    reference (greedy decoding makes trajectories batch-independent),
+    the restored page count and the final conservation ledger.
+    """
+    reqs = build_workload(count, seed=seed, long_frac=1.0, hi_frac=0.0)
+    half = count // 2
+
+    def serve(engine, subset, *, snapshot=None):
+        sched = GSIScheduler(engine, capacity=capacity, cache_aware=True)
+        if snapshot is not None:
+            sched.state = engine.load_cache(sched.state, snapshot)
+        for r in subset:
+            sched.submit(r["prompt"], request_id=r["id"],
+                         max_steps=r["max_steps"], arrival_time=0.0)
+        out = sched.run(jax.random.PRNGKey(seed))
+        ttft = [out[r["id"]].ttft for r in subset
+                if not math.isnan(out[r["id"]].ttft)]
+        return sched, out, ttft
+
+    # uninterrupted reference
+    _, ref_out, _ = serve(make_engine(), reqs)
+    ref = {r["id"]: ref_out[r["id"]].tokens.tolist() for r in reqs}
+    # cold phase: first half, then the cache snapshot "survives the kill"
+    cold_eng = make_engine()
+    cold_sched, cold_out, cold_ttft = serve(cold_eng, reqs[:half])
+    snapshot = cold_eng.save_cache(cold_sched.state, snapshot_path)
+    # warm phase: fresh engine + restore, second half
+    warm_eng = make_engine()
+    warm_sched, warm_out, warm_ttft = serve(
+        warm_eng, reqs[half:],
+        snapshot=snapshot_path if snapshot_path is not None else snapshot)
+    got = {r["id"]: cold_out[r["id"]].tokens.tolist()
+           for r in reqs[:half]}
+    got.update({r["id"]: warm_out[r["id"]].tokens.tolist()
+                for r in reqs[half:]})
+    pager = warm_eng.pager
+    return {
+        "requests": count, "capacity": capacity,
+        "pages_restored": int(snapshot["pages"].shape[0]),
+        "cold": {"ttft_p95_s": _pct(cold_ttft, 95),
+                 "hit_rate": cold_sched.prefix_stats()["hit_rate"]},
+        "warm": {"ttft_p95_s": _pct(warm_ttft, 95),
+                 "hit_rate": warm_sched.prefix_stats()["hit_rate"],
+                 "hits": warm_sched.prefix_stats()["hits"],
+                 "pages_published_decode": warm_sched.prefix_stats()
+                 ["pages_published_decode"]},
+        "identical": got == ref,
+        "conserved": pager.num_free + pager.num_cached
+        == warm_eng.num_pages,
+    }
+
+
+def check_restart(rep, baseline_path):
+    """Assert the --restart contract against BENCH_WARM.json."""
+    with open(baseline_path) as fh:
+        env = json.load(fh)["thresholds"]["loadgen"]
+    assert rep["identical"], \
+        "warm restart drifted: interrupted+restored tokens != " \
+        "uninterrupted greedy run"
+    assert rep["conserved"], "page ledger leaked across the restart"
+    assert rep["pages_restored"] >= env["pages_restored_min"], \
+        f"snapshot restored only {rep['pages_restored']} pages " \
+        f"(min {env['pages_restored_min']})"
+    assert rep["warm"]["hit_rate"] >= env["warm_hit_rate_min"], \
+        f"warm hit rate {rep['warm']['hit_rate']:.2f} below " \
+        f"{env['warm_hit_rate_min']} — the restore did not warm the cache"
+    assert rep["warm"]["ttft_p95_s"] <= env["warm_ttft_p95_s_max"], \
+        f"warm TTFT p95 {rep['warm']['ttft_p95_s']:.3f}s exceeds " \
+        f"{env['warm_ttft_p95_s_max']}s"
+    print("# loadgen restart check passed", flush=True)
+
+
+# ----------------------------------------------------------------------
 # The CI gate
 # ----------------------------------------------------------------------
 def check(report_chunked, report_plain, pre_report, baseline_path):
@@ -342,11 +440,32 @@ def main():
                     help="mean arrival rate, requests/second")
     ap.add_argument("--burst", type=int, default=4)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--restart", action="store_true",
+                    help="run only the warm-restart scenario: kill the "
+                         "server mid-run, restore from a cache snapshot, "
+                         "report cold-vs-warm TTFT p95 (with --check, "
+                         "assert the BENCH_WARM.json contract)")
     args = ap.parse_args()
     args.fast = args.fast or args.smoke
     common.FAST, common.SMOKE = args.fast, args.smoke
     count = args.requests or (10 if args.smoke else 16 if args.fast
                               else 32)
+    if args.restart:
+        rep = restart_scenario(capacity=args.capacity, seed=args.seed)
+        print(f"# restart: {rep['requests']} requests, "
+              f"{rep['pages_restored']} pages restored", flush=True)
+        print(f"cold ttft p95 = {rep['cold']['ttft_p95_s']:.3f}s "
+              f"(hit rate {rep['cold']['hit_rate']:.2f})  "
+              f"warm ttft p95 = {rep['warm']['ttft_p95_s']:.3f}s "
+              f"(hit rate {rep['warm']['hit_rate']:.2f})  "
+              f"identical = {rep['identical']}", flush=True)
+        if args.check:
+            check_restart(rep, BASELINE_WARM)
+        if args.json:
+            with open(args.json, "w") as fh:
+                json.dump({"restart": rep}, fh, indent=2, sort_keys=True)
+            print(f"# report written to {args.json}", flush=True)
+        return
     reqs = build_workload(count, seed=args.seed, process=args.process,
                           rate=args.rate, burst=args.burst)
     print(f"# loadgen: {count} requests, {args.process} arrivals @ "

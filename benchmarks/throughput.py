@@ -34,7 +34,11 @@ A multi-replica workload (two preamble groups, greedy decoding) runs the
 same requests through one replica, two router-fronted replicas with
 preamble-affinity routing, and two with round-robin: ``--check`` asserts
 all three produce identical per-request tokens and that affinity's
-aggregate radix hit-rate strictly beats round-robin's.
+aggregate radix hit-rate strictly beats round-robin's.  A warm-restart
+row snapshots the single replica's radix cache, restores it into a
+brand-new engine and replays the workload: ``--check`` asserts identical
+tokens, strictly more cache-served admissions than the cold run, and the
+``BENCH_WARM.json`` hit-rate envelope.
 
 A tensor-parallel row (only when >= 2 devices are visible — real, or
 forced host devices in the shard-smoke CI job) serves the EOS-governed
@@ -355,8 +359,8 @@ def run(fast: bool = False, *, check: bool = False,
 
     single_eng = GSIServingEngine(*cfgs, *params, g0, mode="gsi",
                                   max_seq=112, paged=True, page_size=16)
-    mr_single = mr_run(GSIScheduler(single_eng, capacity=1),
-                       "replicas1_single")
+    single_sched = GSIScheduler(single_eng, capacity=1)
+    mr_single = mr_run(single_sched, "replicas1_single")
     replica_engines = [
         GSIServingEngine(*cfgs, *params, g0, mode="gsi", max_seq=112,
                          paged=True, page_size=16) for _ in range(2)]
@@ -397,6 +401,25 @@ def run(fast: bool = False, *, check: bool = False,
         f"per_replica_hits="
         f"{'/'.join(str(p['hits']) for p in aps['per_replica'])}(aff)_"
         f"{'/'.join(str(p['hits']) for p in rps['per_replica'])}(rr)")
+
+    # warm restart: snapshot the single replica's radix cache after its
+    # cold grouped-preamble run, restore it into a brand-new engine, and
+    # replay the same workload.  A restart is a state-transfer change,
+    # not an algorithm change: every admission must splice restored
+    # pages and greedy tokens must match the cold run bit-for-bit.
+    wr_snap = single_eng.save_cache(single_sched.state)
+    wr_eng = GSIServingEngine(*cfgs, *params, g0, mode="gsi",
+                              max_seq=112, paged=True, page_size=16)
+    wr_sched = GSIScheduler(wr_eng, capacity=1)
+    wr_sched.state = wr_eng.load_cache(wr_sched.state, wr_snap)
+    mr_warm = mr_run(wr_sched, "replicas1_warm_restart")
+    wps = mr_warm["prefix"]
+    common.emit(
+        "throughput/warm_restart", 0.0,
+        f"pages_restored={int(wr_snap['pages'].shape[0])};"
+        f"warm_hit_rate={wps['hit_rate']:.2f};warm_hits={wps['hits']};"
+        f"cold_hit_rate={mr_single['prefix']['hit_rate']:.2f};"
+        f"cold_hits={mr_single['prefix']['hits']}")
 
     # quantized KV pages + int8 draft weights: the same workload and rng
     # through a bf16-page engine (the capacity baseline: plain cast, no
@@ -584,6 +607,19 @@ def run(fast: bool = False, *, check: bool = False,
         assert aps["queries"] == len(mr_prompts), \
             f"stale prefix counters: {aps['queries']} queries reported " \
             f"for {len(mr_prompts)} admissions"
+        # warm restart: the restored cache must reproduce the cold run's
+        # greedy tokens while serving strictly more admissions from
+        # cache, inside the committed BENCH_WARM.json envelope
+        warm_env = json.loads(pathlib.Path(__file__).with_name(
+            "BENCH_WARM.json").read_text())["thresholds"]["throughput"]
+        assert mr_warm["token_lists"] == mr_single["token_lists"], \
+            "warm-restarted engine drifted from the cold run"
+        assert wps["hits"] > mr_single["prefix"]["hits"], \
+            f"restored cache served no more admissions than the cold " \
+            f"run ({wps['hits']} <= {mr_single['prefix']['hits']})"
+        assert wps["hit_rate"] >= warm_env["warm_hit_rate_min"], \
+            f"warm hit rate {wps['hit_rate']:.2f} below envelope " \
+            f"{warm_env['warm_hit_rate_min']}"
         print("# throughput check passed", flush=True)
 
 
@@ -601,9 +637,11 @@ def main():
                          "round-robin, and async pipeline: sync == async "
                          "tokens bit-identically (dense and paged+prefix, "
                          "1 and 2 replicas), no more engine steps, "
-                         "overlap fraction > 0, and quantized KV: exact "
+                         "overlap fraction > 0, quantized KV: exact "
                          "2x int8-vs-bf16 page capacity + the "
-                         "BENCH_QUANT.json accept/reward drift envelope")
+                         "BENCH_QUANT.json accept/reward drift envelope, "
+                         "and warm restart: snapshot/restore reproduces "
+                         "the cold run inside BENCH_WARM.json")
     ap.add_argument("--capacity", type=int, default=4)
     ap.add_argument("--requests", type=int, default=0)
     args = ap.parse_args()

@@ -164,11 +164,55 @@ def make_frontend(engines, *, capacity: int, continuous: bool = True,
                          chunk_tokens=chunk_tokens)
 
 
+def _frontend_schedulers(sched):
+    """The per-engine schedulers behind a frontend (router or single)."""
+    if isinstance(sched, ReplicaRouter):
+        return [rep.scheduler for rep in sched.replicas]
+    return [sched]
+
+
+def load_frontend_cache(sched, cache_dir: str) -> int:
+    """Warm-restart a frontend from ``cache_dir`` snapshots.
+
+    Loads ``cache-r{i}.npz`` (written by :func:`save_frontend_cache`)
+    into replica ``i``'s state through the engine's snapshot codec —
+    restored radix subtrees serve their first requests from spliced KV
+    pages instead of a cold prefill.  Missing files are skipped (a
+    replica added since the last save simply starts cold).  Returns the
+    number of replicas restored.
+    """
+    loaded = 0
+    for i, s in enumerate(_frontend_schedulers(sched)):
+        path = os.path.join(cache_dir, f"cache-r{i}.npz")
+        if not os.path.exists(path):
+            continue
+        s.state = s.engine.load_cache(s.state, path)
+        loaded += 1
+    return loaded
+
+
+def save_frontend_cache(sched, cache_dir: str) -> int:
+    """Persist every replica's hot radix cache to ``cache_dir``.
+
+    One ``cache-r{i}.npz`` per replica (engines without a live prefix
+    cache are skipped).  Returns the number of snapshots written.
+    """
+    os.makedirs(cache_dir, exist_ok=True)
+    saved = 0
+    for i, s in enumerate(_frontend_schedulers(sched)):
+        eng = s.engine
+        if not getattr(eng, "paged", False) or not eng.prefix_cache:
+            continue
+        eng.save_cache(s.state, os.path.join(cache_dir, f"cache-r{i}.npz"))
+        saved += 1
+    return saved
+
+
 def evaluate_queued(engine, task, problems, rng, *, capacity: int,
                     continuous: bool = True, policy: str = "affinity",
                     sync: bool = True, hash_tier: str = "mod",
                     chunk_tokens: int = 0, priority_every: int = 0,
-                    deadline_s=None, stream=None):
+                    deadline_s=None, stream=None, cache_dir: str = ""):
     """Queued evaluation through the continuous-batching scheduler.
 
     All requests are submitted up front (offered load >= capacity); the
@@ -180,12 +224,18 @@ def evaluate_queued(engine, task, problems, rng, *, capacity: int,
 
     ``priority_every=k`` submits every k-th request at priority 1 (with
     ``deadline_s`` as its SLO), arming preemption; ``stream`` attaches a
-    token-stream callback to the first request.  Returns accuracy plus
-    throughput/latency.
+    token-stream callback to the first request.  ``cache_dir`` enables
+    warm restarts: per-replica radix-cache snapshots are loaded from it
+    before serving (if present) and saved back after the run.  Returns
+    accuracy plus throughput/latency.
     """
     sched = make_frontend(engine, capacity=capacity, continuous=continuous,
                           collect_stats=True, policy=policy, sync=sync,
                           hash_tier=hash_tier, chunk_tokens=chunk_tokens)
+    if cache_dir:
+        warm = load_frontend_cache(sched, cache_dir)
+        print(f"cache-dir {cache_dir}: restored {warm} replica "
+              f"snapshot(s)", flush=True)
     ids = []
     for i, p in enumerate(problems):
         hi = bool(priority_every) and i % priority_every == 0
@@ -196,6 +246,10 @@ def evaluate_queued(engine, task, problems, rng, *, capacity: int,
     t0 = time.time()
     results = sched.run(rng)
     wall = time.time() - t0
+    if cache_dir:
+        saved = save_frontend_cache(sched, cache_dir)
+        print(f"cache-dir {cache_dir}: saved {saved} replica "
+              f"snapshot(s)", flush=True)
     correct, tokens = 0, 0
     latencies = []
     for prob, rid in zip(problems, ids):
@@ -295,6 +349,11 @@ def main() -> None:
     ap.add_argument("--stream", action="store_true",
                     help="print the first request's tokens as they are "
                          "harvested (per-step streaming callback)")
+    ap.add_argument("--cache-dir", default="",
+                    help="warm-restart directory: per-replica radix "
+                         "cache snapshots (cache-rN.npz) are restored "
+                         "from here before serving and saved back after "
+                         "(requires --paged with the prefix cache on)")
     ap.add_argument("--tuned-env", action="store_true",
                     help="apply the XLA/allocator env tuning "
                          "(XLA_FLAGS step markers + single host device, "
@@ -365,7 +424,8 @@ def main() -> None:
                           chunk_tokens=args.chunk_tokens,
                           priority_every=args.priority,
                           deadline_s=args.deadline or None,
-                          stream=_print_stream if args.stream else None)
+                          stream=_print_stream if args.stream else None,
+                          cache_dir=args.cache_dir)
     if args.priority or args.chunk_tokens:
         print(f"slo: preemptions={res['preemptions']} "
               f"deadline_misses={res['deadline_misses']} "

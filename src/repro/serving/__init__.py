@@ -32,5 +32,9 @@ from repro.serving.router import (ReplicaRouter, POLICIES,  # noqa: F401
                                   preamble_rendezvous)
 from repro.serving.scheduler import (GSIScheduler, Request,  # noqa: F401
                                      Response, StreamEvent, TokenStream)
+from repro.serving.snapshot import (index_records,  # noqa: F401
+                                    load_snapshot, restore_records,
+                                    restore_state, save_snapshot,
+                                    snapshot_state)
 from repro.serving.slots import (SlotPool, pack_prompts,  # noqa: F401
                                  pack_tails)

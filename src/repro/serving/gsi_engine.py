@@ -139,6 +139,8 @@ class EngineStats:
     prefix_pages_reused: int = 0  # cached/shared pages spliced into tables
     prefill_tokens: int = 0       # prompt tokens actually prefill-committed
     pages_evicted: int = 0        # cached pages evicted to admit (LRU)
+    # decode-time publication: generated pages made matchable as they fill
+    decode_pages_published: int = 0
     # SLO-aware scheduling counters (priority preemption + chunked prefill)
     preemptions: int = 0          # live slots paused for a higher priority
     resumes: int = 0              # paused requests re-admitted
@@ -235,7 +237,8 @@ def merge_engine_stats(parts: Sequence[EngineStats]) -> EngineStats:
     counters = ("steps", "accepted", "decisions", "draft_tokens",
                 "target_tokens", "requests_finished", "prefix_queries",
                 "prefix_hits", "prefix_hit_tokens", "prefix_pages_reused",
-                "prefill_tokens", "pages_evicted", "preemptions",
+                "prefill_tokens", "pages_evicted",
+                "decode_pages_published", "preemptions",
                 "resumes", "deadline_misses")
     for p in parts:
         with p._lock:
@@ -273,7 +276,8 @@ class GSIServingEngine:
                  rsd_threshold: float = 0.7, max_seq: int = 512,
                  shared_scoring: bool = False, paged: bool = False,
                  page_size: int = 16, num_pages: int = 0,
-                 prefix_cache: bool = True, kv_dtype: Optional[str] = None,
+                 prefix_cache: bool = True, decode_publish: bool = True,
+                 kv_dtype: Optional[str] = None,
                  quantize_draft: bool = False, mesh=None):
         """Build the three models and jit the engine's serving phases.
 
@@ -296,6 +300,12 @@ class GSIServingEngine:
         (``num_pages=0`` sizes the pool to the dense capacity at state
         creation); ``prefix_cache`` enables the radix prefix index on
         paged engines (auto-disabled for recurrent/RWKV stacks).
+        ``decode_publish`` additionally lets the scheduler publish a
+        live slot's *generated* pages as its decode commits fill them
+        (not just prompt pages at admission), so best-of-n retries and
+        duplicate requests splice whole trajectories; publication is
+        ordered after the on-stream commit exactly like ``admit``'s,
+        and tokens are bit-identical with it on or off.
 
         ``kv_dtype`` picks the paged-pool storage format: ``None`` keeps
         the model activation dtype, ``"bf16"`` casts pages, ``"int8"`` /
@@ -353,6 +363,7 @@ class GSIServingEngine:
         # bit-identical outputs.
         self.prefix_cache = bool(prefix_cache and paged
                                  and self._prefix_supported())
+        self.decode_publish = bool(decode_publish and self.prefix_cache)
         self.mesh = mesh
         self.tp = 1
         self._tp_plan = {"attn": False, "mlp": False, "vocab": False}
@@ -1332,6 +1343,41 @@ class GSIServingEngine:
         published = self.publish_prefix(slot, tokens)
         self.release_slot(slot)
         return published
+
+    def save_cache(self, state, path=None, *, roots=None) -> dict:
+        """Snapshot the hot (refcount-free cached) radix subtrees of the
+        live ``state``: token chunk keys, LRU clocks and the cached
+        pages' KV rows — scale rows included for quantized pools.
+
+        Returns the host-side snapshot dict (``serving.snapshot``
+        format) and, when ``path`` is given, also writes it to disk as
+        a single ``.npz``.  ``roots`` restricts the snapshot to the
+        given preamble-group chunks (cache migration pushes one group);
+        ``None`` snapshots everything cached.  No-op (empty snapshot)
+        on dense engines or with the prefix cache off.
+        """
+        from repro.serving.snapshot import save_snapshot, snapshot_state
+        snap = snapshot_state(self, state, roots=roots)
+        if path is not None:
+            save_snapshot(snap, path)
+        return snap
+
+    def load_cache(self, state, snapshot):
+        """Splice a snapshot (dict or ``.npz`` path) into the live
+        ``state``'s prefix cache; returns the new state.
+
+        Page ids are remapped through the page pool's free list —
+        restoring never overwrites pages currently referenced by live
+        slots — and when the pool has fewer free pages than the
+        snapshot has records only the coldest subtrees are dropped.
+        The conservation ledger and ``scale_slots`` lockstep hold after
+        every restore; restoring an empty snapshot is the identity.
+        """
+        from repro.serving.snapshot import load_snapshot, restore_state
+        if isinstance(snapshot, (str, bytes)) or hasattr(snapshot,
+                                                         "__fspath__"):
+            snapshot = load_snapshot(snapshot)
+        return restore_state(self, state, snapshot)
 
     def run(self, prompts: np.ndarray, rng, *,
             collect_stats: bool = True):

@@ -245,6 +245,31 @@ class PagePool:
                     self.evicted += 1
         return freed
 
+    def forget(self, page: int) -> int:
+        """Drop the radix subtree rooted at ``page``'s node without the
+        LRU victim selection of :meth:`evict` — the cache-migration
+        primitive (the source replica forgets a preamble group after
+        its pages were pushed to the destination, so tier-1 affinity
+        stops matching it here).
+
+        Refcount-0 pages of the subtree return to the free list (scale
+        slots released in lockstep); still-referenced pages merely lose
+        their retention and will be freed by their last ``release``.
+        Returns the number of pages actually freed.  Not counted as an
+        eviction (``evicted`` tracks pressure evictions only).
+        """
+        if self.index is None:
+            return 0
+        freed = 0
+        for p in self.index.drop_subtree(page):
+            self.retained.discard(p)
+            if p in self.cached:
+                self.cached.remove(p)
+                self.free.append(p)
+                self.scale_slots.discard(p)
+                freed += 1
+        return freed
+
     # -- transitions ---------------------------------------------------
     def claim(self, slot: int, pages: int,
               shared: Sequence[int] = ()) -> None:

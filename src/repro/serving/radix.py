@@ -129,6 +129,17 @@ class RadixIndex:
                 best_cost = c
         return best
 
+    def groups(self) -> List[Tuple[int, ...]]:
+        """First-chunk keys of the root's children (preamble groups).
+
+        Each key names one independently evictable/migratable subtree:
+        the router's hash tiers place requests by exactly this chunk,
+        so it is the unit rendezvous cache migration moves and the
+        ``roots`` filter of ``serving.snapshot`` selects by.  Sorted
+        for deterministic iteration.
+        """
+        return sorted(self.root.children)
+
     def drop_subtree(self, page: int) -> List[int]:
         """Detach the node owning ``page`` plus its whole subtree.
 

@@ -79,6 +79,21 @@ class Replica:
             + self.scheduler.pool.num_live
 
     @property
+    def cached_groups(self) -> List[Tuple[int, ...]]:
+        """Preamble-group chunks this replica's radix cache holds.
+
+        The first-chunk keys of the engine's radix root whose pages are
+        currently cached (refcount-free) — the unit the router's
+        ``add_replica`` cache migration moves.  Empty for a non-paged or
+        cache-less engine.
+        """
+        pager = self.engine.pager
+        if pager is None or pager.index is None:
+            return []
+        return [chunk for chunk in pager.index.groups()
+                if pager.index.root.children[chunk].page in pager.cached]
+
+    @property
     def has_work(self) -> bool:
         """True while anything is inboxed, queued, decoding or still in
         the scheduler's async pipeline on this replica."""

@@ -61,7 +61,7 @@ import numpy as np
 
 from repro.serving.gsi_engine import EngineStats, merge_engine_stats
 from repro.serving.replica import Replica, build_replicas
-from repro.serving.scheduler import Response
+from repro.serving.scheduler import GSIScheduler, Response
 
 POLICIES = ("affinity", "round_robin", "least_loaded")
 HASH_TIERS = ("mod", "rendezvous")
@@ -176,11 +176,15 @@ class ReplicaRouter:
             seen |= devs
         self.tp: int = max((getattr(e, "tp", 1) or 1) for e in engines) \
             if engines else 1
-        self.replicas: List[Replica] = build_replicas(
-            engines, capacity=capacity, continuous=continuous,
+        # kept so add_replica() can build a scale-out replica's scheduler
+        # with exactly the fleet's settings
+        self._sched_kwargs = dict(
+            capacity=capacity, continuous=continuous,
             prompt_pad_len=prompt_pad_len, collect_stats=collect_stats,
             cache_aware=cache_aware, sync=sync,
             chunk_tokens=chunk_tokens)
+        self.replicas: List[Replica] = build_replicas(
+            engines, **self._sched_kwargs)
         self.policy = policy
         self.skew = skew
         self.hash_tier = hash_tier
@@ -273,6 +277,92 @@ class ReplicaRouter:
             return self._least_loaded(loads)
         self.routing[tier] += 1
         return best
+
+    # ------------------------------------------------------------------
+    # Scale-out with cache migration
+    # ------------------------------------------------------------------
+    def add_replica(self, engine) -> Dict[str, int]:
+        """Grow the fleet by one replica, migrating hot cache to it.
+
+        The new engine joins as replica N with the fleet's scheduler
+        settings.  Then, for every preamble group (root radix chunk) on
+        every existing replica, the hash tier is re-evaluated over the
+        grown fleet: a group that now maps elsewhere has its cached
+        subtree *pushed* through the snapshot codec
+        (:func:`repro.serving.snapshot.snapshot_state` restricted to
+        that group) into the destination's state, and is then dropped
+        from the source (``PagePool.forget``) so tier-1 longest-match
+        affinity follows the pages instead of sticking to the stale
+        copy.  The destination serves the group's next request from
+        spliced pages — no re-prefill.
+
+        Under ``rendezvous`` hashing only ~1/(N+1) of groups remap and
+        every one of them lands on the new replica (bounded movement);
+        under ``mod`` most groups move, which is exactly the cold-start
+        this method exists to avoid — prefer ``hash_tier="rendezvous"``
+        for elastic fleets.  Groups whose root page is pinned by a live
+        slot are skipped (their pages belong to in-flight requests).
+        Call between runs, not while a threaded ``run`` is draining —
+        the migration touches source and destination states directly.
+
+        Returns ``{"groups_moved": g, "pages_moved": p}``.
+        """
+        from repro.serving.snapshot import snapshot_state
+
+        if any(engine is rep.engine for rep in self.replicas):
+            raise ValueError(
+                "replicas must not share engine objects: a paged engine "
+                "backs one live state at a time; build a fresh engine "
+                "for the new replica")
+        if getattr(engine, "kv_dtype", None) != self.kv_dtype:
+            raise ValueError(
+                f"new replica kv_dtype {getattr(engine, 'kv_dtype', None)!r}"
+                f" != fleet kv_dtype {self.kv_dtype!r}")
+        mesh = getattr(engine, "mesh", None)
+        fleet_meshes = [getattr(rep.engine, "mesh", None)
+                        for rep in self.replicas]
+        shape = None if mesh is None else \
+            (tuple(mesh.devices.shape), tuple(mesh.axis_names))
+        fleet_shapes = {None if m is None else
+                        (tuple(m.devices.shape), tuple(m.axis_names))
+                        for m in fleet_meshes}
+        if fleet_shapes and {shape} != fleet_shapes:
+            raise ValueError(
+                f"new replica mesh shape {shape} does not match the "
+                f"fleet's {sorted(map(str, fleet_shapes))}")
+        if mesh is not None:
+            taken = {d.id for m in fleet_meshes if m is not None
+                     for d in m.devices.flat}
+            devs = {d.id for d in mesh.devices.flat}
+            if devs & taken:
+                raise ValueError(
+                    "new replica submesh overlaps the fleet on device "
+                    f"id(s) {sorted(devs & taken)}")
+        rep = Replica(len(self.replicas),
+                      GSIScheduler(engine, **self._sched_kwargs))
+        self.replicas.append(rep)
+        groups_moved = 0
+        pages_moved = 0
+        for src in self.replicas[:-1]:
+            pager = src.engine.pager
+            if pager is None or pager.index is None:
+                continue
+            for chunk in pager.index.groups():
+                dest = self._hash_replica(np.asarray(chunk, np.int32))
+                if dest == src.index:
+                    continue
+                node = pager.index.root.children.get(chunk)
+                if node is None or node.page not in pager.cached:
+                    continue          # pinned by a live slot: stays put
+                snap = snapshot_state(src.engine, src.scheduler.state,
+                                      roots=[chunk])
+                if snap["pages"].size:
+                    dst = self.replicas[dest]
+                    dst.scheduler.state = dst.engine.load_cache(
+                        dst.scheduler.state, snap)
+                pages_moved += pager.forget(node.page)
+                groups_moved += 1
+        return {"groups_moved": groups_moved, "pages_moved": pages_moved}
 
     # ------------------------------------------------------------------
     # Submission / stepping

@@ -317,6 +317,11 @@ class GSIScheduler:
         self._chunk = int(chunk_tokens)
         self._prefill: Dict[int, _Prefill] = {}      # slot -> mid-prefill
         self._live_req: Dict[int, Request] = {}      # slot -> its request
+        # decode-time page publication bookkeeping: the slot's committed
+        # context tokens (admitted prompt + every harvested step) and how
+        # many full pages of it are already in the radix index
+        self._ctx: Dict[int, np.ndarray] = {}        # slot -> context
+        self._pub_full: Dict[int, int] = {}          # slot -> pages published
         self._paused: Dict[str, Response] = {}       # preempted, unfinished
         self._streams: Dict[str, object] = {}        # id -> stream callback
         self._ids: set = set()                       # every id ever submitted
@@ -359,6 +364,8 @@ class GSIScheduler:
         self._t0 = None
         self._prefill = {}
         self._live_req = {}
+        self._ctx = {}
+        self._pub_full = {}
         self._paused = {}
         self._streams = {}
         self._ids = set()
@@ -577,10 +584,15 @@ class GSIScheduler:
         packed = pack_prompts({s: p for s, (_, p) in batch.items()},
                               self.capacity, self._pad)
         mask = np.zeros((self.capacity,), bool)
-        for slot, (req, _) in batch.items():
+        for slot, (req, committed_prompt) in batch.items():
             mask[slot] = True
             self.pool.claim(slot, req.id)
             self._live_req[slot] = req
+            # seed the decode-publication bookkeeping: admit() publishes
+            # exactly the committed prompt's full pages below
+            self._ctx[slot] = np.asarray(committed_prompt, np.int32)
+            self._pub_full[slot] = max(committed_prompt.size - 1, 0) \
+                // self.engine.page_size
             self._steps_taken[slot] = 0
             self._budget[slot] = req.max_steps
             resp = self._paused.pop(req.id, None)
@@ -627,6 +639,7 @@ class GSIScheduler:
             chunks[slot] = pf.req.prompt[pf.committed:pf.committed + take]
             mask[slot] = True
             pf.committed += take
+            self._ctx[slot] = pf.req.prompt[:pf.committed].astype(np.int32)
             total += take
             if budget is not None:
                 budget -= take
@@ -649,7 +662,48 @@ class GSIScheduler:
         for slot in np.nonzero(live)[0]:
             pf = self._prefill.pop(int(slot))
             self.engine.publish_prefix(int(slot), pf.req.prompt)
+            self._pub_full[int(slot)] = \
+                max(pf.req.prompt.size - 1, 0) // self.engine.page_size
         return budget
+
+    # ------------------------------------------------------------------
+    # Decode-time page publication
+    # ------------------------------------------------------------------
+    def _publish_decode(self, slot: int, toks: np.ndarray) -> None:
+        """Fold one harvested step's tokens into the slot's committed
+        context and publish every newly *filled* page to the radix
+        index — the decode-time extension of the admission publish.
+
+        Runs strictly after the step's commit was ordered on the device
+        stream (the step is materialized before any harvest) and before
+        the slot could be released, so a published page's content is
+        complete and its refcount is still held — the same ordering
+        contract ``admit`` obeys.  Per the engine invariant the
+        context's last token is pending, so exactly
+        ``(len - 1) // page_size`` pages are full.  No-op unless the
+        engine has ``decode_publish`` (and a live prefix cache).
+        """
+        ctx = self._ctx.get(slot)
+        if ctx is None:
+            return
+        if toks.size:
+            ctx = np.concatenate([ctx, np.asarray(toks, np.int32)])
+            self._ctx[slot] = ctx
+        eng = self.engine
+        if not getattr(eng, "decode_publish", False):
+            return
+        full = max(ctx.size - 1, 0) // eng.page_size
+        if full <= self._pub_full.get(slot, 0):
+            return                        # no page filled this step
+        published = eng.publish_prefix(slot, ctx)
+        self._pub_full[slot] = full
+        if published:
+            self.stats.bump(decode_pages_published=published)
+
+    def _drop_ctx(self, slot: int) -> None:
+        """Forget a released/preempted slot's publication bookkeeping."""
+        self._ctx.pop(slot, None)
+        self._pub_full.pop(slot, None)
 
     # ------------------------------------------------------------------
     # Priority preemption
@@ -708,6 +762,7 @@ class GSIScheduler:
         self.state = self.engine.force_done(self.state, mask)
         self.engine.preempt_slot(slot, context)
         self.pool.release(slot)
+        self._drop_ctx(slot)
         remaining = int(self._budget[slot] - self._steps_taken[slot])
         resp.preemptions += 1
         self.stats.bump(preemptions=1)
@@ -757,6 +812,7 @@ class GSIScheduler:
             "pages_reused": s.prefix_pages_reused,
             "prefill_tokens": s.prefill_tokens,
             "pages_evicted": s.pages_evicted,
+            "pages_published_decode": s.decode_pages_published,
             "pages_cached": 0 if pager is None else pager.num_cached,
         }
 
@@ -801,7 +857,11 @@ class GSIScheduler:
                 continue               # mid-prefill rows are device-inert
             resp = self._partial[slot]
             toks = res.chosen[slot]
-            self._emit_step(resp, toks[toks != PAD], self._now())
+            kept = toks[toks != PAD]
+            self._emit_step(resp, kept, self._now())
+            # publish the pages this step filled *before* any release
+            # below could drop the slot's page references
+            self._publish_decode(slot, kept)
             self._steps_taken[slot] += 1
             reason = ""
             if res.eos[slot]:
@@ -816,6 +876,7 @@ class GSIScheduler:
                 self.engine.release_slot(slot)
                 del self._partial[slot]
                 self._live_req.pop(slot, None)
+                self._drop_ctx(slot)
                 self._finalize(resp, reason, self._now())
                 finished.append(resp)
         self.state = self.engine.force_done(self.state, force_done)
@@ -914,6 +975,11 @@ class GSIScheduler:
         for slot, resp in pend.bound.items():
             if res.done_prev[slot]:
                 continue
+            toks = res.chosen[slot]
+            # res is already host numpy (the ticket was materialized just
+            # above), so publication here has the same commit-then-publish
+            # ordering as the synchronous path — and precedes the release
+            self._publish_decode(slot, toks[toks != PAD])
             self._steps_taken[slot] += 1
             reason = ""
             if res.eos[slot]:
@@ -928,6 +994,7 @@ class GSIScheduler:
                 self.engine.release_slot(slot)
                 del self._partial[slot]
                 self._live_req.pop(slot, None)
+                self._drop_ctx(slot)
                 finished.append((slot, resp, reason, now))
         self.state = self.engine.force_done(self.state, force_done)
         self._retired = _RetiredStep(res=res, bound=pend.bound,

@@ -1,0 +1,292 @@
+"""Hot-cache snapshot/restore codec for the radix prefix cache.
+
+A warm radix cache is the difference between a restarted (or newly
+added) replica serving its first requests from spliced KV pages and a
+cold-cache prefill storm.  This module serializes the *evictable* part
+of a paged engine's prefix cache — the refcount-free ``cached`` pages,
+their token chunk keys and LRU clocks, and (for quantized pools) their
+per-page scale rows — and restores it into another live state without
+ever disturbing pages the allocator has handed out.
+
+Two layers:
+
+* **Record layer** (:func:`index_records` / :func:`restore_records`) —
+  pure host bookkeeping over a :class:`~repro.serving.pages.PagePool`
+  and its :class:`~repro.serving.radix.RadixIndex`.  A record is one
+  trie node: ``(chunk, clock, page, parent)`` with ``parent`` an index
+  into the record list (-1 = child of the root).  Restoration *remaps*
+  page ids through the destination pool's free list: every restored
+  node gets a freshly popped free page, so a snapshot can never
+  resurrect a page id that is currently referenced by a live slot.
+  Hottest-first admission (descending clock, parents before children)
+  keeps the most recently used subtrees when the destination has fewer
+  free pages than the snapshot has records.
+* **Payload layer** (:func:`snapshot_state` / :func:`restore_state`) —
+  gathers the recorded pages' rows out of every paged cache pool leaf
+  (``kp``/``vp`` payloads and ``ks``/``vs`` quantized scale rows, in
+  one batched ``device_get``) and scatters them back at the remapped
+  page ids.  Codes and scales round-trip byte-identically; the page
+  conservation ledger (``free + referenced + cached == num_pages``,
+  ``scale_slots == referenced | cached``) holds after every restore.
+
+:func:`save_snapshot` / :func:`load_snapshot` put a snapshot on disk as
+a single ``.npz`` (used by ``launch/serve.py --cache-dir`` warm
+restarts); :meth:`GSIServingEngine.save_cache` / ``load_cache`` are the
+engine-level entry points, and :meth:`ReplicaRouter.add_replica` drives
+the same codec for rendezvous cache migration.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import _is_paged, _is_stacked
+from repro.serving.pages import PagePool
+from repro.serving.radix import RadixNode
+
+# one record = one trie node: (chunk, clock, page, parent record index)
+Record = Tuple[Tuple[int, ...], int, int, int]
+
+
+def _path_str(path) -> str:
+    """Stable string key for a cache-pytree path (dict keys and list
+    indices joined with '.'), used to name payload leaves."""
+    parts = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "idx", None)
+        parts.append(str(k))
+    return ".".join(parts)
+
+
+def index_records(pool: PagePool,
+                  roots: Optional[Sequence[Sequence[int]]] = None
+                  ) -> List[Record]:
+    """Extract the snapshot records of ``pool``'s radix index.
+
+    Walks the trie preorder (parents always precede their children in
+    the returned list) and keeps only the *cached closure*: descent
+    stops at the first page that is not in ``pool.cached`` — pages with
+    live readers stay with their slots, and a subtree hanging under a
+    referenced page is unreachable for restore anyway (its path would
+    be broken).  ``roots`` optionally restricts the walk to the given
+    first-chunk (preamble-group) keys — the unit the router migrates.
+    """
+    index = pool.index
+    if index is None:
+        return []
+    want = None if roots is None else \
+        {tuple(int(t) for t in r) for r in roots}
+    out: List[Record] = []
+    stack: List[Tuple[RadixNode, int]] = []
+    for key in sorted(index.root.children, reverse=True):
+        if want is not None and key not in want:
+            continue
+        stack.append((index.root.children[key], -1))
+    while stack:
+        node, parent = stack.pop()
+        if node.page not in pool.cached:
+            continue                      # referenced: stays with its slot
+        rec_idx = len(out)
+        out.append((node.key, int(node.clock), int(node.page), parent))
+        for key in sorted(node.children, reverse=True):
+            stack.append((node.children[key], rec_idx))
+    return out
+
+
+def restore_records(pool: PagePool,
+                    records: Sequence[Record]) -> Dict[int, int]:
+    """Rebuild snapshot records inside ``pool``'s radix index.
+
+    Returns ``{old_page: new_page}`` for every node actually created —
+    the pages whose payload the caller must copy.  Three guarantees:
+
+    * **free-list remap** — new nodes draw their page ids exclusively
+      from ``pool.free``; referenced (live) pages are never touched, so
+      restoring into a busy engine cannot corrupt in-flight requests.
+    * **hottest-first** — records are admitted in descending snapshot
+      clock (parents first at equal clocks, which the parent >= child
+      clock invariant makes a topological order), so when free pages
+      run out the coldest subtrees are the ones dropped.
+    * **dedupe** — a chunk already present at its path keeps the
+      existing node and page (no allocation, no payload copy); the
+      snapshot's children attach underneath it.
+
+    Restored clocks are rebased past the destination's current clock
+    (preserving the snapshot's relative LRU order), and ancestors are
+    bumped so a parent is never staler than a restored child.
+    """
+    index = pool.index
+    if index is None or not records:
+        return {}
+    order = sorted(range(len(records)),
+                   key=lambda i: (-records[i][1], i))
+    min_clock = min(r[1] for r in records)
+    base = index.clock + 1
+    node_of: Dict[int, RadixNode] = {}
+    remap: Dict[int, int] = {}
+    max_clock = index.clock
+    for i in order:
+        key, clock, old_page, parent = records[i]
+        if parent == -1:
+            pnode = index.root
+        else:
+            pnode = node_of.get(parent)
+            if pnode is None:             # parent dropped: branch is dead
+                continue
+        new_clock = base + (clock - min_clock)
+        existing = pnode.children.get(key)
+        if existing is not None:
+            existing.clock = max(existing.clock, new_clock)
+            node_of[i] = existing
+            max_clock = max(max_clock, existing.clock)
+            continue
+        if len(pool.free) <= pool.num_claimed:
+            # free pages backing outstanding admission reservations are
+            # spoken for — taking one would let a live slot's ensure()
+            # pop an empty free list.  Keep the hottest, drop the rest.
+            continue
+        page = pool.free.pop()
+        node = RadixNode(key, page, pnode, new_clock)
+        pnode.children[key] = node
+        index.nodes[page] = node
+        pool.retained.add(page)
+        pool.cached.add(page)
+        if pool.quantized:
+            pool.scale_slots.add(page)    # restored with the page
+        node_of[i] = node
+        remap[old_page] = page
+        max_clock = max(max_clock, new_clock)
+        anc = pnode                       # parent at least as recent
+        while anc is not index.root and anc.clock < new_clock:
+            anc.clock = new_clock
+            anc = anc.parent
+    index.clock = max(index.clock, max_clock)
+    return remap
+
+
+def snapshot_state(engine, state,
+                   roots: Optional[Sequence[Sequence[int]]] = None) -> dict:
+    """Snapshot the engine's cached radix subtrees out of ``state``.
+
+    Returns a host-side snapshot dict: the index records as flat arrays
+    (``chunks``/``clocks``/``parents``/``pages``) plus one gathered
+    payload array per paged cache leaf (``kp``/``vp`` pages and, when
+    quantized, ``ks``/``vs`` scale rows), pulled in a single batched
+    ``device_get``.  ``roots`` restricts the snapshot to the given
+    preamble-group chunks (cache migration); ``None`` takes everything
+    cached.  An engine without a live prefix cache yields an empty
+    snapshot (restoring it is a no-op).
+    """
+    snap = {
+        "page_size": engine.page_size,
+        "kv_dtype": getattr(engine, "kv_dtype", None),
+        "chunks": np.zeros((0, engine.page_size), np.int32),
+        "clocks": np.zeros((0,), np.int64),
+        "parents": np.zeros((0,), np.int32),
+        "pages": np.zeros((0,), np.int32),
+        "leaves": {},
+    }
+    if not getattr(engine, "paged", False) or engine.pager is None \
+            or not engine.prefix_cache:
+        return snap
+    engine._check_gen(state)
+    records = index_records(engine.pager, roots=roots)
+    if not records:
+        return snap
+    snap["chunks"] = np.asarray([r[0] for r in records], np.int32)
+    snap["clocks"] = np.asarray([r[1] for r in records], np.int64)
+    snap["pages"] = np.asarray([r[2] for r in records], np.int32)
+    snap["parents"] = np.asarray([r[3] for r in records], np.int32)
+    ids = jnp.asarray(snap["pages"])
+    gathered = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            state["caches"])[0]:
+        if not _is_paged(path):
+            continue
+        axis = 1 if _is_stacked(path) else 0
+        gathered[_path_str(path)] = jnp.take(leaf, ids, axis=axis)
+    snap["leaves"] = jax.device_get(gathered)
+    return snap
+
+
+def restore_state(engine, state, snapshot: dict):
+    """Splice a snapshot's cached subtrees into ``state``; returns the
+    new state (the input is not mutated).
+
+    Validates the snapshot's ``page_size``/``kv_dtype`` against the
+    engine, rebuilds the index records through the pool's free list
+    (:func:`restore_records` — live referenced pages are never
+    overwritten) and scatters the accepted records' payload rows into
+    every paged cache leaf at their *remapped* page ids.
+    """
+    if not getattr(engine, "paged", False) or engine.pager is None \
+            or not engine.prefix_cache:
+        return state
+    engine._check_gen(state)
+    if int(snapshot["page_size"]) != engine.page_size:
+        raise ValueError(
+            f"snapshot page_size {snapshot['page_size']} != engine "
+            f"page_size {engine.page_size}")
+    if (snapshot.get("kv_dtype") or None) != (engine.kv_dtype or None):
+        raise ValueError(
+            f"snapshot kv_dtype {snapshot.get('kv_dtype')!r} != engine "
+            f"kv_dtype {engine.kv_dtype!r} (page payloads would not "
+            f"round-trip)")
+    pages = np.asarray(snapshot["pages"], np.int64)
+    records: List[Record] = [
+        (tuple(int(t) for t in snapshot["chunks"][i]),
+         int(snapshot["clocks"][i]), int(pages[i]),
+         int(snapshot["parents"][i]))
+        for i in range(pages.size)]
+    remap = restore_records(engine.pager, records)
+    if not remap:
+        return state
+    rows = np.asarray([i for i in range(pages.size)
+                       if int(pages[i]) in remap])
+    new_ids = jnp.asarray([remap[int(pages[i])] for i in rows],
+                          jnp.int32)
+    leaves = snapshot["leaves"]
+
+    def put(path, leaf):
+        key = _path_str(path)
+        if key not in leaves:
+            return leaf
+        arr = np.asarray(leaves[key])
+        if _is_stacked(path):
+            return leaf.at[:, new_ids].set(
+                jnp.asarray(arr[:, rows], leaf.dtype))
+        return leaf.at[new_ids].set(jnp.asarray(arr[rows], leaf.dtype))
+
+    new_state = dict(state)
+    new_state["caches"] = jax.tree_util.tree_map_with_path(
+        put, state["caches"])
+    return new_state
+
+
+def save_snapshot(snapshot: dict, path) -> None:
+    """Write a snapshot dict to ``path`` as a single ``.npz`` file."""
+    np.savez(
+        path,
+        __page_size=np.asarray(int(snapshot["page_size"]), np.int64),
+        __kv_dtype=np.asarray(snapshot.get("kv_dtype") or ""),
+        __chunks=snapshot["chunks"], __clocks=snapshot["clocks"],
+        __parents=snapshot["parents"], __pages=snapshot["pages"],
+        **{f"leaf.{k}": v for k, v in snapshot["leaves"].items()})
+
+
+def load_snapshot(path) -> dict:
+    """Read a snapshot ``.npz`` written by :func:`save_snapshot`."""
+    with np.load(path) as f:
+        return {
+            "page_size": int(f["__page_size"]),
+            "kv_dtype": str(f["__kv_dtype"]) or None,
+            "chunks": f["__chunks"], "clocks": f["__clocks"],
+            "parents": f["__parents"], "pages": f["__pages"],
+            "leaves": {k[len("leaf."):]: f[k] for k in f.files
+                       if k.startswith("leaf.")},
+        }

@@ -316,7 +316,7 @@ def test_paged_scheduler_run_matches_dense(dense_triple, gcfg):
 
 
 def test_paged_modes_run(dense_triple, gcfg):
-    """Every engine mode runs (and frees all pages) under paging."""
+    """Every engine mode runs (and returns all pages) under paging."""
     cfgs, params = dense_triple
     for mode in ("gsi", "rsd", "sbon_s", "sbon_b", "gsi_norej"):
         eng = GSIServingEngine(*cfgs, *params, gcfg, mode=mode, max_seq=48,
@@ -327,7 +327,10 @@ def test_paged_modes_run(dense_triple, gcfg):
         out = sched.run(jax.random.PRNGKey(1))
         assert len(out) == 3, mode
         assert eng.pager.num_assigned == 0, mode     # all pages returned
-        assert eng.pager.num_free == eng.num_pages, mode
+        # decode-time publication may retain generated-trajectory pages
+        # in the LRU set — free or cached, never leaked
+        assert eng.pager.num_free + eng.pager.num_cached \
+            == eng.num_pages, mode
 
 
 # ----------------------------------------------------------------------
@@ -362,7 +365,9 @@ def test_scheduler_defers_on_page_exhaustion(dense_triple, gcfg):
         done = sched.step(k)
     assert [r.request_id for r in done] == [second]
     assert second in sched.responses      # deferred, not dropped
-    assert eng.pager.num_free == eng.num_pages
+    # decode publication parks trajectory pages cached (evictable), so
+    # the ledger — not an all-free pool — is the leak check
+    assert eng.pager.num_free + eng.pager.num_cached == eng.num_pages
 
 
 def test_stale_paged_state_raises(dense_triple, gcfg):

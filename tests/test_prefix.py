@@ -301,7 +301,8 @@ def test_shared_pages_survive_reader_and_content_is_never_touched(
         done = sched.step(k)
     assert [r.request_id for r in done] == [a]
     cached = sorted(eng.pager.cached)
-    assert len(cached) == 2
+    # >= 2: decode-time publication also caches generated-trajectory pages
+    assert len(cached) >= 2
     before = _pool_pages(sched.state["caches"], cached)
     b = sched.submit(_prompt([35, 36, 4]), max_steps=2)
     while b not in sched.responses:
@@ -334,7 +335,8 @@ def test_admission_evicts_cached_pages_instead_of_deferring(dense_triple,
         rng, k = jax.random.split(rng)
         done = sched.step(k)
     assert [r.request_id for r in done] == [a]
-    assert eng.pager.num_cached == 2      # preamble pages retained
+    assert eng.pager.num_cached >= 2      # preamble pages retained (plus
+    #                                       decode-published trajectory)
     b = sched.submit(np.concatenate([pre_b, [35, 36, 4]]), max_steps=2)
     rng, k = jax.random.split(rng)
     sched.step(k)

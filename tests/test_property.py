@@ -13,6 +13,7 @@ from hypothesis import given, settings
 from repro.core import theory, tilted_policy, tilted_rewards
 from repro.sampling.sampler import top_p_filter
 from repro.serving.pages import PagePool, RadixIndex, pages_for
+from repro.serving.snapshot import index_records, restore_records
 
 FINITE = dict(allow_nan=False, allow_infinity=False)
 
@@ -152,6 +153,8 @@ def test_page_pool_invariants_under_interleavings(data):
     # small token alphabet so different "prompts" collide into shared
     # radix paths reasonably often
     next_slot = [0]
+    slot_toks = {}                   # slot -> committed context tokens
+    saved = [None]                   # last snapshot's records
 
     def live_slots():
         return sorted(pool.assigned)
@@ -173,6 +176,7 @@ def test_page_pool_invariants_under_interleavings(data):
         full = (len(toks) - 1) // PS
         if full:
             pool.publish(toks[:full * PS], pool.assigned[slot][:full])
+        slot_toks[slot] = list(toks)
 
     def op_ensure():
         slots = live_slots()
@@ -190,13 +194,46 @@ def test_page_pool_invariants_under_interleavings(data):
             return
         slot = data.draw(st.sampled_from(slots), label="release_slot")
         pool.release(slot)
+        slot_toks.pop(slot, None)
 
     def op_evict():
         want = data.draw(st.integers(1, num_pages), label="evict_n")
         pool.evict(want)
 
+    def op_publish_decode_page():
+        # decode-time publication: a live slot commits a few more tokens
+        # and publishes every newly filled page it already owns (the
+        # scheduler's _publish_decode path over the pool primitives)
+        slots = [s for s in live_slots() if s in slot_toks]
+        if not slots:
+            return
+        slot = data.draw(st.sampled_from(slots), label="pub_slot")
+        grown = data.draw(st.lists(st.integers(1, 3), min_size=1,
+                                   max_size=2 * PS), label="decoded")
+        toks = slot_toks[slot] + grown
+        slot_toks[slot] = toks
+        # only pages the slot actually holds are publishable (claims for
+        # not-yet-ensured pages stay reservations)
+        full = min((len(toks) - 1) // PS, pool.blocks_assigned(slot))
+        if full:
+            pool.publish(toks[:full * PS], pool.assigned[slot][:full])
+
+    def op_snapshot():
+        saved[0] = index_records(pool)
+
+    def op_restore():
+        # restore the last snapshot into the live pool: dedupes against
+        # surviving subtrees, draws fresh pages for evicted ones, never
+        # touches referenced pages or reserved free pages
+        if saved[0] is None:
+            return
+        remap = restore_records(pool, saved[0])
+        assert not (set(remap.values()) & set(pool.refcount))
+
     ops = {"claim": op_claim, "ensure": op_ensure,
-           "release": op_release, "evict": op_evict}
+           "release": op_release, "evict": op_evict,
+           "publish_decode_page": op_publish_decode_page,
+           "snapshot": op_snapshot, "restore": op_restore}
     for _ in range(data.draw(st.integers(1, 30), label="steps")):
         ops[data.draw(st.sampled_from(sorted(ops)), label="op")]()
         _check_pool(pool)
@@ -205,6 +242,16 @@ def test_page_pool_invariants_under_interleavings(data):
         pool.release(slot)
         _check_pool(pool)
     assert pool.num_free + pool.num_cached == pool.num_pages
+    # a snapshot of the drained pool restores into a *fresh* pool (the
+    # migration/warm-restart shape) with the ledger intact and every
+    # record admitted (the fresh pool has pages for all of them)
+    records = index_records(pool)
+    fresh = PagePool(num_pages, PS, index=RadixIndex(PS),
+                     kv_dtype=kv_dtype, page_bytes=page_bytes)
+    remap = restore_records(fresh, records)
+    _check_pool(fresh)
+    assert len(remap) == len(records)
+    assert fresh.num_cached == len(records)
     # and a full eviction returns the pool to pristine
     pool.evict(num_pages)
     _check_pool(pool)

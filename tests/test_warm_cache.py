@@ -1,0 +1,351 @@
+"""Warm-cache lifecycle: decode-time page publication, hot-cache
+snapshot/restore and rendezvous cache migration.
+
+Differential coverage:
+  * Decode-time publication is behaviour-invisible: tokens are
+    bit-identical with publication on/off across full / sliding-window /
+    hybrid stacks, in both the sync and the pipelined scheduler loops.
+  * Second-wave requests over a *generated* trajectory hit the radix
+    beyond the prompt pages — the pages decode published are matchable.
+  * Snapshot -> disk -> fresh-engine restore round-trips byte-identically
+    (codes and scale rows for quantized pools), preserves greedy-seeded
+    tokens and the hit rate, and keeps the page conservation ledger and
+    ``scale_slots`` lockstep intact.
+  * Restoring into a *busy* engine never resurrects pages the allocator
+    handed to live slots: restored pages come exclusively off the free
+    list and admission reservations stay honourable.
+  * ``ReplicaRouter.add_replica`` pushes a remapped preamble group's hot
+    pages to the new replica (rendezvous: every moved group lands there)
+    and the destination reports a radix hit on its first admission.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import GSIConfig, ModelConfig
+from repro.models import build_model
+from repro.serving import (GSIScheduler, GSIServingEngine, ReplicaRouter,
+                           load_snapshot)
+from repro.serving.router import preamble_rendezvous
+
+PAD = 0
+
+# 2 full pages (ps=8) of shared preamble + distinct per-request tails
+PRE = np.asarray([5 + (i % 24) for i in range(17)], np.int32)
+
+
+def _prompt(tail, pre=PRE):
+    return np.concatenate([pre, np.asarray(tail, np.int32)])
+
+
+def _triple(draft):
+    target = dataclasses.replace(draft, name=draft.name + "-t",
+                                 num_layers=3)
+    prm = dataclasses.replace(target, name=draft.name + "-p",
+                              reward_head=True)
+    params = (build_model(draft).init(jax.random.PRNGKey(0)),
+              build_model(target).init(jax.random.PRNGKey(1)),
+              build_model(prm).init(jax.random.PRNGKey(2)))
+    return (draft, target, prm), params
+
+
+def _stack_triple(pattern, window):
+    base = ModelConfig(
+        name=f"t-wc-{'-'.join(pattern)}-{window}", family="dense"
+        if "recurrent" not in pattern else "hybrid",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=64, head_dim=16, dtype="float32", param_dtype="float32",
+        layer_pattern=pattern, window_size=window or 4096)
+    return _triple(base)
+
+
+@pytest.fixture(scope="module")
+def gcfg():
+    return GSIConfig(n=2, max_step_tokens=5, max_steps=3, beta=4.0,
+                     min_step_reward=-1.0)
+
+
+@pytest.fixture(scope="module")
+def full_triple():
+    return _stack_triple(("full",), 0)
+
+
+def _check_ledger(pool):
+    """Page conservation + scale-slot lockstep (serving/pages.py)."""
+    free = set(pool.free)
+    referenced = set(pool.refcount)
+    cached = set(pool.cached)
+    assert len(free) == len(pool.free)
+    assert free | referenced | cached == set(range(pool.num_pages))
+    assert not free & referenced and not free & cached
+    assert not referenced & cached
+    assert pool.num_free >= pool.num_claimed
+    assert cached == pool.retained - referenced
+    if pool.index is not None:
+        assert set(pool.index.nodes) == pool.retained
+    if pool.quantized:
+        assert pool.scale_slots == referenced | cached
+    else:
+        assert not pool.scale_slots
+
+
+def _sched_run(engine, prompts, *, capacity=2, sync=True, seed=7,
+               max_steps=None):
+    sched = GSIScheduler(engine, capacity=capacity, sync=sync)
+    ids = [sched.submit(p, max_steps=max_steps) for p in prompts]
+    out = sched.run(jax.random.PRNGKey(seed))
+    return {r: out[r].tokens.tolist() for r in ids}, sched
+
+
+# ----------------------------------------------------------------------
+# Decode-time publication: behaviour-invisible, trajectory matchable
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern,window", [
+    (("full",), 0),
+    (("full", "local"), 12),
+    (("recurrent", "full"), 0),
+])
+@pytest.mark.parametrize("sync", [True, False])
+def test_decode_publication_token_identity(gcfg, pattern, window, sync):
+    """Publication on/off must be bit-identical: it changes neither rng
+    consumption nor admission timing (pages move free<->cached, the
+    evictable total is unchanged), and published pages hold exactly the
+    KV that decoding produced."""
+    cfgs, params = _stack_triple(pattern, window)
+    prompts = [_prompt([33, 34, 4]), _prompt([35, 36, 4]),
+               _prompt([37, 38, 4])]
+    runs, scheds = {}, {}
+    for name, pub in [("on", True), ("off", False)]:
+        eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96,
+                               paged=True, page_size=8,
+                               decode_publish=pub)
+        runs[name], scheds[name] = _sched_run(eng, prompts, sync=sync)
+        _check_ledger(eng.pager)
+    assert runs["on"] == runs["off"]
+    on = scheds["on"].prefix_stats()
+    if scheds["on"].engine.prefix_cache:      # hybrid auto-disables
+        assert on["pages_published_decode"] >= 1
+    assert scheds["off"].prefix_stats()["pages_published_decode"] == 0
+
+
+def test_second_wave_hits_generated_trajectory(full_triple, gcfg):
+    """A request whose prompt extends a *generated* trajectory must
+    splice the decode-published pages — more tokens than the original
+    prompt's pages alone could cover."""
+    cfgs, params = full_triple
+    eng = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                           page_size=8)
+    sched = GSIScheduler(eng, capacity=1)
+    first = _prompt([33, 34, 4])              # 20 tokens -> 2 full pages
+    a = sched.submit(first, max_steps=2)
+    out = sched.run(jax.random.PRNGKey(3))
+    st0 = sched.prefix_stats()
+    assert st0["pages_published_decode"] >= 1
+    traj = np.concatenate([first, out[a].tokens.astype(np.int32)])
+    _, matched = eng.match_prefix(traj)
+    assert matched > 16                       # beyond the prompt's pages
+    expected = min(matched, (traj.size - 1) // 8 * 8)
+    b = sched.submit(traj, max_steps=2)
+    out2 = sched.run(jax.random.PRNGKey(4))
+    assert b in out2
+    st1 = sched.prefix_stats()
+    assert st1["hits"] == st0["hits"] + 1
+    assert st1["hit_tokens"] - st0["hit_tokens"] == expected
+    _check_ledger(eng.pager)
+
+
+# ----------------------------------------------------------------------
+# Snapshot / restore round-trip
+# ----------------------------------------------------------------------
+
+def _record_paths(snap):
+    """Root-to-node token path (tuple of chunks) for every record."""
+    chunks = [tuple(int(t) for t in c) for c in snap["chunks"]]
+    parents = np.asarray(snap["parents"], np.int64)
+    paths = []
+    for i in range(len(chunks)):
+        path, j = [], i
+        while j != -1:
+            path.append(chunks[j])
+            j = int(parents[j])
+        paths.append(tuple(reversed(path)))
+    return paths
+
+
+def _canon(snap):
+    """Snapshot as {token path: {leaf: row}} — page-id independent."""
+    out = {}
+    for i, path in enumerate(_record_paths(snap)):
+        row = {}
+        for key, arr in snap["leaves"].items():
+            axis = 1 if "blocks" in key.split(".") else 0
+            row[key] = np.take(np.asarray(arr), i, axis=axis)
+        out[path] = row
+    return out
+
+
+@pytest.mark.parametrize("kv_dtype", [None, "int8"])
+def test_snapshot_restore_roundtrip(full_triple, gcfg, tmp_path,
+                                    kv_dtype):
+    """Disk round-trip into a fresh engine: byte-identical payloads
+    (codes + scales for int8), identical same-seed tokens, restored
+    hit rate at least the cold run's, ledger intact."""
+    cfgs, params = full_triple
+    mk = dict(max_seq=96, paged=True, page_size=8, kv_dtype=kv_dtype)
+    eng = GSIServingEngine(*cfgs, *params, gcfg, **mk)
+    prompts = [_prompt([33, 34, 4]), _prompt([35, 36, 4])]
+    # capacity=1 serialises admission: the second request hits the
+    # preamble pages the first one published -> cold hit rate 1/2
+    cold, sched = _sched_run(eng, prompts, capacity=1, seed=3)
+    st_cold = sched.prefix_stats()
+    assert st_cold["hits"] == 1
+    path = tmp_path / "cache.npz"
+    snap = eng.save_cache(sched.state, path)
+    assert snap["pages"].size >= 2
+    if kv_dtype == "int8":
+        codes = [k for k in snap["leaves"] if k.split(".")[-1] == "kp"]
+        scales = [k for k in snap["leaves"] if k.split(".")[-1] == "ks"]
+        assert codes and scales
+        assert all(snap["leaves"][k].dtype == np.int8 for k in codes)
+    loaded = load_snapshot(path)
+    assert loaded["page_size"] == 8
+    assert (loaded["kv_dtype"] or None) == kv_dtype
+
+    eng2 = GSIServingEngine(*cfgs, *params, gcfg, **mk)
+    sched2 = GSIScheduler(eng2, capacity=1)
+    sched2.state = eng2.load_cache(sched2.state, str(path))
+    _check_ledger(eng2.pager)
+    assert eng2.pager.num_cached == snap["pages"].size
+    # byte-identity, page-id independent: every restored node's payload
+    # rows (codes AND scales) equal the snapshotted ones
+    snap2 = eng2.save_cache(sched2.state)
+    a, b = _canon(snap), _canon(snap2)
+    assert a.keys() == b.keys()
+    for p in a:
+        assert a[p].keys() == b[p].keys()
+        for key in a[p]:
+            assert a[p][key].dtype == b[p][key].dtype
+            np.testing.assert_array_equal(a[p][key], b[p][key])
+    # warm rerun: same seed -> identical tokens; every admission hits
+    ids = [sched2.submit(p) for p in prompts]
+    out = sched2.run(jax.random.PRNGKey(3))
+    warm = {r: out[r].tokens.tolist() for r in ids}
+    assert list(warm.values()) == list(cold.values())
+    st_warm = sched2.prefix_stats()
+    assert st_warm["hits"] == 2
+    assert st_warm["hit_rate"] >= st_cold["hit_rate"]
+    _check_ledger(eng2.pager)
+
+
+def test_restore_into_busy_engine_never_resurrects_pages(full_triple,
+                                                         gcfg, tmp_path):
+    """Restoring while slots hold referenced pages and admission holds
+    free-page reservations must draw exclusively from the *unreserved*
+    free list: live assignments, refcounts and claims are untouched."""
+    cfgs, params = full_triple
+    mk = dict(max_seq=96, paged=True, page_size=8)
+    donor = GSIServingEngine(*cfgs, *params, gcfg, **mk)
+    pre_a = np.asarray([21 + (i % 10) for i in range(17)], np.int32)
+    _, dsched = _sched_run(donor, [_prompt([33, 34, 4], pre_a),
+                                   _prompt([35, 36, 4], pre_a)],
+                           capacity=1, seed=3)
+    path = tmp_path / "donor.npz"
+    donor.save_cache(dsched.state, path)
+
+    eng = GSIServingEngine(*cfgs, *params, gcfg, **mk)
+    sched = GSIScheduler(eng, capacity=2)
+    b = sched.submit(_prompt([41, 42, 4]), max_steps=3)
+    rng = jax.random.PRNGKey(9)
+    for _ in range(2):                        # request is now mid-decode
+        rng, k = jax.random.split(rng)
+        sched.step(k)
+    pool = eng.pager
+    assert pool.num_referenced > 0
+    ref_before = dict(pool.refcount)
+    assigned_before = {s: list(p) for s, p in pool.assigned.items()}
+    cached_before = set(pool.cached)
+
+    sched.state = eng.load_cache(sched.state, str(path))
+    _check_ledger(pool)
+    # live pages untouched; everything restored came off the free list
+    assert dict(pool.refcount) == ref_before
+    assert {s: list(p) for s, p in pool.assigned.items()} \
+        == assigned_before
+    restored = pool.cached - cached_before
+    assert restored and not restored & set(ref_before)
+    assert pool.num_free >= pool.num_claimed
+    # the in-flight request still finishes cleanly on the spliced state
+    while b not in sched.responses:
+        rng, k = jax.random.split(rng)
+        sched.step(k)
+    _check_ledger(pool)
+
+
+# ----------------------------------------------------------------------
+# Rendezvous cache migration
+# ----------------------------------------------------------------------
+
+def test_add_replica_migrates_remapped_groups(full_triple, gcfg):
+    """Scale-out 1 -> 2 under rendezvous hashing: groups that remap to
+    the new replica arrive there as spliced pages (radix hit on first
+    admission), groups that keep their placement stay put."""
+    cfgs, params = full_triple
+    mk = dict(max_seq=96, paged=True, page_size=8)
+    # probed rendezvous placements over 2 replicas for these chunks:
+    # base 2 -> replica 1 (moves), base 3 -> replica 0 (stays)
+    pre_move = np.asarray([2 + (i % 10) for i in range(17)], np.int32)
+    pre_stay = np.asarray([3 + (i % 10) for i in range(17)], np.int32)
+    assert preamble_rendezvous(pre_move[:8], 2) == 1
+    assert preamble_rendezvous(pre_stay[:8], 2) == 0
+
+    eng0 = GSIServingEngine(*cfgs, *params, gcfg, **mk)
+    router = ReplicaRouter([eng0], capacity=2, policy="affinity",
+                           hash_tier="rendezvous", skew=None,
+                           threaded=False)
+    for pre in (pre_move, pre_stay):
+        for tail in ([33, 34, 4], [35, 36, 4]):
+            router.submit(_prompt(tail, pre))
+    router.run(jax.random.PRNGKey(5))
+    assert eng0.pager.num_cached >= 4         # both groups' preambles
+
+    eng1 = GSIServingEngine(*cfgs, *params, gcfg, **mk)
+    moved = router.add_replica(eng1)
+    assert moved["groups_moved"] >= 1
+    assert moved["pages_moved"] >= 2
+    _check_ledger(eng0.pager)
+    _check_ledger(eng1.pager)
+    # moved group: pages live on the new replica, gone from the source
+    assert eng1.match_prefix(_prompt([99], pre_move))[1] >= 16
+    assert eng0.match_prefix(_prompt([99], pre_move))[1] == 0
+    # stayed group: untouched on the source, absent from the new replica
+    assert eng0.match_prefix(_prompt([99], pre_stay))[1] >= 16
+    assert eng1.match_prefix(_prompt([99], pre_stay))[1] == 0
+
+    # tier-1 affinity follows the pages: the next same-preamble request
+    # routes to the destination and hits the radix on first admission
+    rid = router.submit(_prompt([41, 42, 4], pre_move))
+    assert router.replica_of(rid) == 1
+    out = router.run(jax.random.PRNGKey(6))
+    assert rid in out
+    st = router.replicas[1].scheduler.prefix_stats()
+    assert st["hits"] >= 1 and st["hit_tokens"] >= 16
+    _check_ledger(eng1.pager)
+
+
+def test_add_replica_rejects_mismatched_engine(full_triple, gcfg):
+    """Fleet homogeneity is enforced on scale-out too: shared engine
+    objects and kv_dtype mismatches are rejected outright."""
+    cfgs, params = full_triple
+    eng0 = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                            page_size=8)
+    router = ReplicaRouter([eng0], capacity=1, threaded=False)
+    with pytest.raises(ValueError, match="share engine"):
+        router.add_replica(eng0)
+    other = GSIServingEngine(*cfgs, *params, gcfg, max_seq=96, paged=True,
+                             page_size=8, kv_dtype="int8")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        router.add_replica(other)
+    assert router.num_replicas == 1           # failed adds leave no stub
